@@ -1,0 +1,78 @@
+//! Table-3 reproduction: instability-score ratios (paper Appendix F).
+//!
+//! Runs 20 update steps per model and reports
+//! tau_i = ||f(x_i, W_i) - f(x_i, W_{i-1})||_F^2 / ||W_i - W_{i-1}||_F^2
+//! as a per-step ratio against self-attention.  The paper's claim:
+//! kernelized attention and Skyformer sit well below 1.0, Nyströmformer
+//! hovers around 1.0.
+//!
+//! ```bash
+//! cargo run --release --example instability -- --task listops
+//! ```
+
+use skyformer::coordinator::instability::InstabilityProbe;
+use skyformer::coordinator::trainer::TrainConfig;
+use skyformer::report::tables::Table;
+use skyformer::runtime::engine::Engine;
+use skyformer::util::args::Args;
+
+fn main() -> skyformer::Result<()> {
+    let args = Args::from_env();
+    let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
+    let task = args.get_or("task", "listops").to_string();
+    let steps = args.get_usize("steps", 20)?;
+    let lr = args.get_f32("lr", 1e-4)?;
+    let seed = args.get_u64("seed", 0)?;
+    let attentions = args.get_list("attentions").unwrap_or_else(|| {
+        vec![
+            "nystromformer".into(),
+            "kernelized".into(),
+            "skyformer".into(),
+        ]
+    });
+
+    eprintln!("baseline: softmax self-attention ({steps} steps)");
+    let mut cfg = TrainConfig::new(&task, "softmax");
+    cfg.seed = seed;
+    let mut probe = InstabilityProbe::new(&engine, cfg)?;
+    let base = probe.run(steps, lr)?;
+
+    let mut t = Table::new(
+        &format!("Table 3: instability-score ratio vs self-attention ({task})"),
+        &["model", "mean tau", "ratio (<1 = more stable)"],
+    );
+    t.row(vec![
+        "self-attention".into(),
+        format!("{:.4e}", base.mean_tau()),
+        "1.00".into(),
+    ]);
+
+    for attn in &attentions {
+        eprintln!("probing {attn} ...");
+        let mut cfg = TrainConfig::new(&task, attn);
+        cfg.seed = seed;
+        let mut probe = match InstabilityProbe::new(&engine, cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("  skip: {e}");
+                continue;
+            }
+        };
+        let r = probe.run(steps, lr)?;
+        let ratio: f32 = r
+            .taus
+            .iter()
+            .zip(&base.taus)
+            .map(|(a, b)| a / b.max(1e-30))
+            .sum::<f32>()
+            / r.taus.len() as f32;
+        t.row(vec![
+            attn.clone(),
+            format!("{:.4e}", r.mean_tau()),
+            format!("{ratio:.2}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(paper Table 3, listops column: Nystromformer 1.01, KA 0.77, Skyformer 0.79)");
+    Ok(())
+}

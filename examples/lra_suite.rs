@@ -1,0 +1,109 @@
+//! LRA suite driver: Tables 1 & 2 plus the Figure-2/3 curves, over every
+//! (task, attention) artifact that has been built.
+//!
+//! ```bash
+//! # everything that `make artifacts` built, 200 steps, 1 seed:
+//! cargo run --release --example lra_suite
+//! # the full-grid reproduction (build with `make artifacts-full` first):
+//! cargo run --release --example lra_suite -- --steps 600 --seeds 3 \
+//!     --curves curves.json
+//! ```
+//!
+//! Accuracy columns -> Table 1; s/step + peak memory -> Table 2; the
+//! `--curves` JSON carries (wall-time, val-acc/val-loss) series -> Figures
+//! 2 and 3.  Paper-vs-measured is recorded in EXPERIMENTS.md.
+
+use skyformer::coordinator::trainer::{TrainConfig, Trainer};
+use skyformer::report::tables::{fmt_bytes, fmt_secs, Table};
+use skyformer::runtime::engine::Engine;
+use skyformer::util::args::Args;
+use skyformer::util::json;
+
+fn main() -> skyformer::Result<()> {
+    let args = Args::from_env();
+    let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
+    let steps = args.get_usize("steps", 200)?;
+    let seeds = args.get_u64("seeds", 1)?;
+
+    let mut configs = engine.manifest().trainable_configs();
+    configs.retain(|(_, _, pallas)| !pallas);
+    if let Some(only_tasks) = args.get_list("tasks") {
+        configs.retain(|(t, _, _)| only_tasks.contains(t));
+    }
+    if let Some(only_attn) = args.get_list("attentions") {
+        configs.retain(|(_, a, _)| only_attn.contains(a));
+    }
+    if configs.is_empty() {
+        eprintln!("no artifacts match; run `make artifacts` (or artifacts-full)");
+        return Ok(());
+    }
+    eprintln!("suite: {} configs x {seeds} seeds x {steps} steps", configs.len());
+
+    let mut acc = Table::new(
+        "Table 1: classification accuracy (%) on synthetic LRA",
+        &["model", "task", "test_acc", "best_val", "seeds"],
+    );
+    let mut cost = Table::new(
+        "Table 2: training cost",
+        &["model", "task", "s/step", "total", "peak_mem"],
+    );
+    let mut curves = Vec::new();
+
+    for (task, attn, _) in &configs {
+        let mut test_accs = Vec::new();
+        let mut best_accs = Vec::new();
+        let mut step_secs = Vec::new();
+        let mut totals = Vec::new();
+        let mut peak = 0usize;
+        for seed in 0..seeds {
+            let mut cfg = TrainConfig::new(task, attn);
+            cfg.steps = steps;
+            cfg.eval_every = (steps / 6).max(10);
+            cfg.eval_batches = args.get_usize("eval-batches", 8)?;
+            cfg.seed = seed;
+            let mut trainer = Trainer::new(&engine, cfg)?;
+            let r = trainer.train()?;
+            eprintln!(
+                "{task}/{attn} seed {seed}: test {:.3} best {:.3} in {}",
+                r.test_acc,
+                r.best_eval_acc,
+                fmt_secs(r.total_seconds)
+            );
+            test_accs.push(r.test_acc);
+            best_accs.push(r.best_eval_acc);
+            step_secs.push(r.metrics.mean_step_seconds());
+            totals.push(r.total_seconds);
+            peak = peak.max(r.metrics.peak_bytes);
+            curves.push(json::obj(vec![
+                ("task", json::s(task.clone())),
+                ("attention", json::s(attn.clone())),
+                ("seed", json::num(seed as f64)),
+                ("metrics", r.metrics.to_json()),
+            ]));
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        let meand = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        acc.row(vec![
+            attn.clone(),
+            task.clone(),
+            format!("{:.2}", 100.0 * mean(&test_accs)),
+            format!("{:.2}", 100.0 * mean(&best_accs)),
+            seeds.to_string(),
+        ]);
+        cost.row(vec![
+            attn.clone(),
+            task.clone(),
+            format!("{:.3}", meand(&step_secs)),
+            fmt_secs(meand(&totals)),
+            fmt_bytes(peak),
+        ]);
+    }
+
+    println!("{}", acc.render());
+    println!("{}", cost.render());
+    if let Some(path) = args.get("curves") {
+        std::fs::write(path, json::to_string(&json::Value::Array(curves)))?;
+        println!("Figure 2/3 curves written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! End-to-end training driver (the DESIGN.md §4 "E2E validation" run):
+//! train the Skyformer LRA classifier on synthetic ListOps for a few
+//! hundred steps, logging the loss curve, periodic validation accuracy,
+//! and the final test accuracy of the best checkpoint.  Results are
+//! recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example train_listops -- --steps 300 --attention skyformer
+//! ```
+
+use skyformer::coordinator::trainer::{TrainConfig, Trainer};
+use skyformer::report::tables::{fmt_bytes, fmt_secs};
+use skyformer::runtime::engine::Engine;
+use skyformer::util::args::Args;
+
+fn main() -> skyformer::Result<()> {
+    let args = Args::from_env();
+    let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
+
+    let mut cfg = TrainConfig::new(
+        args.get_or("task", "listops"),
+        args.get_or("attention", "skyformer"),
+    );
+    cfg.steps = args.get_usize("steps", 300)?;
+    cfg.eval_every = args.get_usize("eval-every", 50)?;
+    cfg.eval_batches = args.get_usize("eval-batches", 8)?;
+    cfg.seed = args.get_u64("seed", 0)?;
+    cfg.verbose = true;
+    cfg.log_every = 10;
+
+    println!(
+        "training {}/{} for {} steps (batch {}, seq {})",
+        cfg.task,
+        cfg.attention,
+        cfg.steps,
+        engine
+            .manifest()
+            .find(&cfg.task, &cfg.attention, "train", false)?
+            .task_config
+            .batch_size,
+        engine
+            .manifest()
+            .find(&cfg.task, &cfg.attention, "train", false)?
+            .task_config
+            .seq_len,
+    );
+
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    let result = trainer.train()?;
+
+    println!("\n=== loss curve (every 10 steps) ===");
+    for rec in result.metrics.steps.iter().step_by(10) {
+        println!(
+            "step {:>5}  loss {:.4}  acc {:.3}  ({:.2}s/step)",
+            rec.step, rec.loss, rec.acc, rec.wall_seconds
+        );
+    }
+    println!("\n=== validation curve ===");
+    for e in &result.metrics.evals {
+        println!(
+            "step {:>5}  val_loss {:.4}  val_acc {:.3}  @ {:.1}s",
+            e.step, e.loss, e.acc, e.at_seconds
+        );
+    }
+    println!("\n=== summary ===");
+    println!("best val acc : {:.4}", result.best_eval_acc);
+    println!("test acc     : {:.4}", result.test_acc);
+    println!("total time   : {}", fmt_secs(result.total_seconds));
+    println!("mean s/step  : {:.3}", result.metrics.mean_step_seconds());
+    println!("peak tensors : {}", fmt_bytes(result.metrics.peak_bytes));
+
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(
+            path,
+            skyformer::util::json::to_string(&result.metrics.to_json()),
+        )?;
+        println!("metrics json : {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,309 @@
+"""AOT lowering: JAX step functions -> HLO *text* artifacts + manifest.
+
+This is the only place python touches the pipeline; ``make artifacts`` runs
+it once and the rust coordinator is self-contained afterwards.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Every artifact is a *flat* function — pytrees are flattened here and the
+leaf order/naming/shapes are recorded in ``manifest.json`` so the rust side
+(runtime::manifest) can address parameters by name for checkpointing and
+feed inputs positionally for execution.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --set default
+    python -m compile.aot --out-dir ../artifacts --tasks listops --attentions skyformer --pallas
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, train_step
+
+_DTYPE_NAMES = {
+    jnp.float32.dtype: "f32",
+    jnp.int32.dtype: "i32",
+    jnp.uint32.dtype: "u32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_specs(prefix: str, tree) -> list[dict]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = prefix + jax.tree_util.keystr(path)
+        out.append(
+            {
+                "name": name,
+                "shape": list(leaf.shape),
+                "dtype": _DTYPE_NAMES[jnp.dtype(leaf.dtype)],
+            }
+        )
+    return out
+
+
+def _scalar(name: str, dtype: str) -> dict:
+    return {"name": name, "shape": [], "dtype": dtype}
+
+
+def _array(name: str, shape: tuple[int, ...], dtype: str) -> dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _spec_struct(entries: list[dict]):
+    inv = {"f32": jnp.float32, "i32": jnp.int32, "u32": jnp.uint32}
+    return [jax.ShapeDtypeStruct(tuple(e["shape"]), inv[e["dtype"]]) for e in entries]
+
+
+def lower_config(
+    task_name: str,
+    attention: str,
+    out_dir: Path,
+    *,
+    pallas: bool = False,
+    kinds: tuple[str, ...] = ("init", "train", "eval", "embed"),
+    num_features: int | None = None,
+) -> list[dict]:
+    """Lower all step functions for one (task, attention) config."""
+    task = configs.TASKS[task_name]
+    overrides = {"pallas": pallas}
+    if num_features is not None:
+        overrides["num_features"] = num_features
+    cfg = configs.model_for(attention, **overrides)
+    fns = train_step.make_fns(task, cfg)
+
+    # Abstract params/opt to derive leaf specs without allocating real arrays.
+    params_shape = jax.eval_shape(
+        lambda s: model.init_params(jax.random.PRNGKey(s), task, cfg),
+        jnp.uint32(0),
+    )
+    params_treedef = jax.tree_util.tree_structure(params_shape)
+    opt_shape = {
+        "m": params_shape,
+        "v": params_shape,
+        "t": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    opt_treedef = jax.tree_util.tree_structure(opt_shape)
+
+    p_specs = _leaf_specs("params", params_shape)
+    o_specs = _leaf_specs("opt", opt_shape)
+    n_p, n_o = len(p_specs), len(o_specs)
+    tok_shape = model.token_shape(task)
+    lbl_shape = (task.batch_size,)
+
+    stem = f"{task_name}_{attention}" + ("_pallas" if pallas else "")
+    if num_features is not None:
+        stem += f"_d{num_features}"
+    entries = []
+
+    def unflatten(leaves_p, leaves_o):
+        return (
+            jax.tree_util.tree_unflatten(params_treedef, leaves_p),
+            jax.tree_util.tree_unflatten(opt_treedef, leaves_o),
+        )
+
+    def emit(kind: str, flat_fn, in_specs: list[dict], out_specs: list[dict]):
+        t0 = time.time()
+        # keep_unused: the positional feeding contract requires every leaf
+        # to stay an entry parameter even if a kind (e.g. embed) ignores it.
+        lowered = jax.jit(flat_fn, keep_unused=True).lower(*_spec_struct(in_specs))
+        text = to_hlo_text(lowered)
+        fname = f"{stem}.{kind}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        entries.append(
+            {
+                "name": f"{stem}.{kind}",
+                "file": fname,
+                "kind": kind,
+                "task": task_name,
+                "attention": attention,
+                "pallas": pallas,
+                "inputs": in_specs,
+                "outputs": out_specs,
+                "num_params": n_p,
+                "num_opt": n_o,
+                "task_config": dataclasses.asdict(task),
+                "model_config": dataclasses.asdict(cfg),
+            }
+        )
+        print(f"  {fname}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s")
+
+    if "init" in kinds:
+        def init_flat(seed):
+            params, opt = fns["init"](seed)
+            return tuple(jax.tree_util.tree_leaves(params)) + tuple(
+                jax.tree_util.tree_leaves(opt)
+            )
+
+        emit("init", init_flat, [_scalar("seed", "u32")], p_specs + o_specs)
+
+    if "train" in kinds:
+        def train_flat(*args):
+            leaves_p = list(args[:n_p])
+            leaves_o = list(args[n_p : n_p + n_o])
+            tokens, labels, seed, lr = args[n_p + n_o :]
+            params, opt = unflatten(leaves_p, leaves_o)
+            params, opt, loss, acc = fns["train"](params, opt, tokens, labels, seed, lr)
+            return (
+                tuple(jax.tree_util.tree_leaves(params))
+                + tuple(jax.tree_util.tree_leaves(opt))
+                + (loss, acc)
+            )
+
+        in_specs = (
+            p_specs
+            + o_specs
+            + [
+                _array("tokens", tok_shape, "i32"),
+                _array("labels", lbl_shape, "i32"),
+                _scalar("seed", "u32"),
+                _scalar("lr", "f32"),
+            ]
+        )
+        out_specs = p_specs + o_specs + [_scalar("loss", "f32"), _scalar("acc", "f32")]
+        emit("train", train_flat, in_specs, out_specs)
+
+    if "eval" in kinds:
+        def eval_flat(*args):
+            leaves_p = list(args[:n_p])
+            tokens, labels, seed = args[n_p:]
+            params = jax.tree_util.tree_unflatten(params_treedef, leaves_p)
+            loss, acc = fns["eval"](params, tokens, labels, seed)
+            return (loss, acc)
+
+        emit(
+            "eval",
+            eval_flat,
+            p_specs
+            + [
+                _array("tokens", tok_shape, "i32"),
+                _array("labels", lbl_shape, "i32"),
+                _scalar("seed", "u32"),
+            ],
+            [_scalar("loss", "f32"), _scalar("acc", "f32")],
+        )
+
+    if "embed" in kinds:
+        def embed_flat(*args):
+            leaves_p = list(args[:n_p])
+            tokens, seed = args[n_p:]
+            params = jax.tree_util.tree_unflatten(params_treedef, leaves_p)
+            return (fns["embed"](params, tokens, seed),)
+
+        emb_dim = cfg.emb_dim * (2 if task.dual else 1)
+        emit(
+            "embed",
+            embed_flat,
+            p_specs + [_array("tokens", tok_shape, "i32"), _scalar("seed", "u32")],
+            [_array("embed", (task.batch_size, emb_dim), "f32")],
+        )
+
+    return entries
+
+
+# Artifact sets. "default" is what `make artifacts` builds; "full" adds every
+# attention on every task (Table 1/2 complete grid).
+def _set_default() -> list[tuple[str, str, bool]]:
+    out = [("listops", a, False) for a in configs.ATTENTION_KINDS]
+    for t in ("text", "retrieval", "pathfinder", "image"):
+        for a in ("softmax", "kernelized", "skyformer"):
+            out.append((t, a, False))
+    out.append(("listops", "skyformer", True))  # pallas-path proof artifact
+    return out
+
+
+def _set_full() -> list[tuple[str, str, bool]]:
+    out = [(t, a, False) for t in configs.TASKS for a in configs.ATTENTION_KINDS]
+    out.append(("listops", "skyformer", True))
+    return out
+
+
+def _set_smoke() -> list[tuple[str, str, bool]]:
+    return [("listops", "skyformer", False), ("listops", "skyformer", True)]
+
+
+SETS = {"default": _set_default, "full": _set_full, "smoke": _set_smoke}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", dest="set_name", default=None, choices=sorted(SETS))
+    ap.add_argument("--tasks", nargs="*", default=None)
+    ap.add_argument("--attentions", nargs="*", default=None)
+    ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--kinds", nargs="*", default=("init", "train", "eval", "embed"))
+    ap.add_argument(
+        "--num-features",
+        type=int,
+        default=None,
+        help="override the feature/landmark budget (ablation artifacts; "
+        "the stem gains a _dN suffix)",
+    )
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    manifest = (
+        json.loads(manifest_path.read_text()) if manifest_path.exists() else {"artifacts": {}}
+    )
+
+    if args.tasks or args.attentions:
+        tasks = args.tasks or list(configs.TASKS)
+        attns = args.attentions or list(configs.ATTENTION_KINDS)
+        jobs = [(t, a, args.pallas) for t in tasks for a in attns]
+    else:
+        jobs = SETS[args.set_name or "default"]()
+
+    for task_name, attention, pallas in jobs:
+        stem = f"{task_name}_{attention}" + ("_pallas" if pallas else "")
+        if args.num_features is not None:
+            stem += f"_d{args.num_features}"
+        done = all(
+            f"{stem}.{k}" in manifest["artifacts"]
+            and (out_dir / f"{stem}.{k}.hlo.txt").exists()
+            for k in args.kinds
+        )
+        if done:
+            print(f"{stem}: up to date")
+            continue
+        print(f"{stem}: lowering ...")
+        for entry in lower_config(
+            task_name,
+            attention,
+            out_dir,
+            pallas=pallas,
+            kinds=tuple(args.kinds),
+            num_features=args.num_features,
+        ):
+            manifest["artifacts"][entry["name"]] = entry
+        manifest_path.write_text(json.dumps(manifest, indent=1))
+
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Attention module registry: the 9 mechanisms of the paper's Table 1.
+
+Each module exposes ``init(key, cfg, seq_len) -> dict`` and
+``apply(extra, q, k, v, key, cfg) -> out`` (see common.py for the contract).
+"""
+
+from __future__ import annotations
+
+from . import (  # noqa: F401
+    bigbird,
+    common,
+    informer,
+    kernelized,
+    linformer,
+    nystromformer,
+    performer,
+    reformer,
+    skyformer,
+    softmax,
+)
+
+REGISTRY = {
+    "softmax": softmax,
+    "kernelized": kernelized,
+    "skyformer": skyformer,
+    "nystromformer": nystromformer,
+    "linformer": linformer,
+    "performer": performer,
+    "reformer": reformer,
+    "informer": informer,
+    "bigbird": bigbird,
+}
+
+
+def get(name: str):
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown attention {name!r}; have {sorted(REGISTRY)}") from None

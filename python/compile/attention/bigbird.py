@@ -1,0 +1,76 @@
+"""BigBird-style block-sparse attention baseline (Zaheer et al. 2020).
+
+Block pattern per query block i: one global block (block 0), the sliding
+window {i-1, i, i+1} (wrap-around), and r random blocks.  Queries inside the
+global block additionally attend to the full sequence.  Duplicate gathered
+blocks (e.g. the window of block 1 overlapping the global block) are masked
+so no key is double-counted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+_N_RANDOM = 2
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001
+    return {}
+
+
+def apply(extra, q, k, v, key, cfg):
+    b = cfg.block_size
+
+    def f(q2, k2, v2, subkey):
+        n, p = q2.shape
+        d_v = v2.shape[1]
+        bb = min(b, n)
+        pad = (-n) % bb
+        if pad:
+            q2 = jnp.pad(q2, ((0, pad), (0, 0)))
+            k2 = jnp.pad(k2, ((0, pad), (0, 0)))
+            v2 = jnp.pad(v2, ((0, pad), (0, 0)))
+        np_ = q2.shape[0]
+        nb = np_ // bb
+        blocks_i = jnp.arange(nb)
+        rand = jax.random.randint(subkey, (nb, _N_RANDOM), 0, nb)
+        sel = jnp.stack(
+            [
+                jnp.zeros(nb, jnp.int32),  # global block
+                (blocks_i - 1) % nb,
+                blocks_i,
+                (blocks_i + 1) % nb,
+            ],
+            axis=1,
+        )
+        sel = jnp.concatenate([sel, rand], axis=1)  # (nb, s)
+        s_sel = sel.shape[1]
+        # mask duplicate block ids (keep first occurrence only)
+        eq = sel[:, :, None] == sel[:, None, :]  # (nb, j, j')
+        dup = jnp.sum(jnp.tril(eq, k=-1), axis=-1) > 0  # (nb, j)
+
+        kb = k2.reshape(nb, bb, p)
+        vb = v2.reshape(nb, bb, d_v)
+        kg = kb[sel].reshape(nb, s_sel * bb, p)  # (nb, s*b, p)
+        vg = vb[sel].reshape(nb, s_sel * bb, d_v)
+        qb = q2.reshape(nb, bb, p)
+        s = jnp.einsum("ncp,nmp->ncm", qb, kg)  # (nb, b, s*b)
+        keymask = jnp.repeat(dup, bb, axis=1)  # (nb, s*b)
+        # also mask padded key positions
+        kpos = sel[:, :, None] * bb + jnp.arange(bb)[None, None, :]
+        kpos = kpos.reshape(nb, s_sel * bb)
+        s = jnp.where((keymask | (kpos >= n))[:, None, :], -1e30, s)
+        w = common.row_softmax(s)
+        out = jnp.einsum("ncm,nmd->ncd", w, vg).reshape(np_, d_v)
+
+        # global block queries attend to everything
+        kmask = (jnp.arange(np_) >= n)[None, :]
+        sg = jnp.where(kmask, -1e30, q2[:bb] @ k2.T)
+        og = common.row_softmax(sg) @ v2
+        out = out.at[:bb].set(og)
+        return out[:n]
+
+    return common.map_heads(f, q, k, v, key)

@@ -1,0 +1,46 @@
+"""Shared helpers for the attention module registry.
+
+Every attention module exposes
+
+* ``init(key, cfg, seq_len) -> dict`` — extra learnable params (most return {})
+* ``apply(extra, q, k, v, key, cfg) -> out`` — q, k, v of shape (B, H, N, D);
+  q and k arrive **pre-scaled by p^-1/4** so ``q @ k.T == QK^T/sqrt(p)`` and
+  the Gaussian kernel has the paper's bandwidth.
+
+Modules implement per-head 2D math; ``map_heads`` lifts it over (B, H) with
+an independent PRNG key per head so stochastic approximators (skyformer
+landmarks, performer features, reformer hashes, bigbird random blocks) do
+not share randomness across heads.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def map_heads(
+    fn: Callable[[jax.Array, jax.Array, jax.Array, jax.Array], jax.Array],
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    key: jax.Array,
+) -> jax.Array:
+    """vmap ``fn(q2d, k2d, v2d, key)`` over the flattened (B*H) leading dim."""
+    b, h, n, d = q.shape
+    m = k.shape[2]
+    qf = q.reshape(b * h, n, d)
+    kf = k.reshape(b * h, m, d)
+    vf = v.reshape(b * h, m, v.shape[3])
+    keys = jax.random.split(key, b * h)
+    out = jax.vmap(fn)(qf, kf, vf, keys)
+    return out.reshape(b, h, n, out.shape[-1])
+
+
+def row_softmax(s: jax.Array) -> jax.Array:
+    """Numerically stable row softmax."""
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)

@@ -1,0 +1,48 @@
+"""Informer ProbSparse attention baseline (Zhou et al. 2020).
+
+Queries are scored by the sparsity measure ``M(q) = max_j(q.k_j) -
+mean_j(q.k_j)`` estimated on a random key sample; only the top-u queries run
+full attention, the rest emit the mean of V (the non-causal Informer
+fallback).  u and the key-sample size are both ``cfg.num_features`` to match
+the paper's per-row visit budget.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001
+    return {}
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    u_budget = cfg.num_features
+
+    def f(q2, k2, v2, subkey):
+        n = q2.shape[0]
+        m = k2.shape[0]
+        u = min(u_budget, n)
+        su = min(u_budget, m)
+        idx = jax.random.choice(subkey, m, shape=(su,), replace=False)
+        sample = q2 @ k2[idx].T  # (n, su)
+        sparsity = jnp.max(sample, axis=-1) - jnp.mean(sample, axis=-1)
+        # argsort instead of lax.top_k: the old HLO text parser in
+        # xla_extension 0.5.1 rejects the `topk(...)` instruction
+        # stop_gradient: selection indices are non-differentiable, and the
+        # vmapped argsort JVP trips a batched-gather bug in this toolchain
+        top = jnp.argsort(jax.lax.stop_gradient(-sparsity))[:u]
+        # gather/scatter via one-hot matmuls: vmapped `.at[top].set` lowers
+        # to a batched scatter (operand_batching_dims) that the old
+        # xla_client converter in this toolchain rejects
+        sel = jax.nn.one_hot(top, n, dtype=q2.dtype)  # (u, n)
+        qt = sel @ q2  # (u, p)
+        attn = common.row_softmax(qt @ k2.T) @ v2  # (u, d_v)
+        base = jnp.broadcast_to(jnp.mean(v2, axis=0), (n, v2.shape[1]))
+        covered = sel.sum(axis=0)[:, None]  # (n, 1) in {0,1}
+        return base * (1.0 - covered) + sel.T @ attn
+
+    return common.map_heads(f, q, k, v, key)

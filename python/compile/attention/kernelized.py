@@ -1,0 +1,25 @@
+"""Kernelized Attention (paper §4.1): the softmax structure replaced by a
+Gaussian kernel, ``C V`` with ``C = kappa(Q/p^{1/4}, K/p^{1/4})``.
+
+Still O(n^2) — this is the paper's *stability* contribution (Table 3);
+Skyformer is its O(n d) Nyström acceleration.
+"""
+
+from __future__ import annotations
+
+from ..kernels import autodiff, ref
+from . import common
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001
+    return {}
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    if cfg.pallas:
+        def f(q2, k2, v2, _key):
+            return autodiff.kernelized_attention(q2, k2, v2)
+    else:
+        def f(q2, k2, v2, _key):
+            return ref.kernelized_attention(q2, k2, v2)
+    return common.map_heads(f, q, k, v, key)

@@ -1,0 +1,35 @@
+"""Linformer baseline (Wang et al. 2020).
+
+Johnson–Lindenstrauss compression of keys and values: learned projections
+E, F in R^{r x n} give ``softmax(Q (E K)^T / sqrt(p)) (F V)`` — linear in n.
+The only baseline here with learnable approximation parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init(key, cfg, seq_len):
+    r = cfg.num_features
+    ke, kf = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(seq_len)
+    return {
+        "proj_e": jax.random.normal(ke, (r, seq_len), jnp.float32) * scale,
+        "proj_k": jax.random.normal(kf, (r, seq_len), jnp.float32) * scale,
+    }
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    e, f = extra["proj_e"], extra["proj_k"]
+
+    def g(q2, k2, v2, _key):
+        n = k2.shape[0]
+        ke = e[:, :n] @ k2  # (r, p)
+        vf = f[:, :n] @ v2  # (r, d_v)
+        return common.row_softmax(q2 @ ke.T) @ vf
+
+    return common.map_heads(g, q, k, v, key)

@@ -1,0 +1,49 @@
+"""Nyströmformer baseline (Xiong et al. 2021).
+
+Applies the Nyström method *directly to the softmax attention matrix* — the
+non-PSD usage the Skyformer paper critiques (§2, §4.2 Remark):
+
+    S_hat = softmax(Q L_k^T) pinv(softmax(L_q L_k^T)) softmax(L_q K^T) V
+
+with landmarks L_q, L_k the segment means of Q and K (their released
+design), and pinv the same Razavi iteration *without* the Lemma-3
+preconditioner (their matrix is not PSD, so the preconditioner's guarantee
+does not apply — exactly the paper's point).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..kernels import ref
+from . import common
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001
+    return {}
+
+
+def _segment_means(x: jnp.ndarray, num: int) -> jnp.ndarray:
+    """num segment-mean landmarks of the (n, d) matrix x (n padded to num)."""
+    n, d = x.shape
+    num = min(num, n)
+    pad = (-n) % num
+    if pad:
+        # pad by repeating the mean so padded rows do not bias segments
+        x = jnp.concatenate([x, jnp.broadcast_to(x.mean(0), (pad, d))], axis=0)
+    return x.reshape(num, -1, d).mean(axis=1)
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    num = cfg.num_features
+
+    def f(q2, k2, v2, _key):
+        lq = _segment_means(q2, num)
+        lk = _segment_means(k2, num)
+        f1 = common.row_softmax(q2 @ lk.T)  # (n, d)
+        a = common.row_softmax(lq @ lk.T)  # (d, d), non-PSD in general
+        f3 = common.row_softmax(lq @ k2.T)  # (d, n)
+        z = ref.ns_iterations(a, cfg.ns_iters)
+        return f1 @ (z @ (f3 @ v2))
+
+    return common.map_heads(f, q, k, v, key)

@@ -1,0 +1,85 @@
+"""Performer baseline (Choromanski et al. 2020), FAVOR+ positive features.
+
+Unbiased softmax-kernel estimator from the Gaussian-integral identity
+``exp(x.y) = E_w[exp(w.x - |x|^2/2) exp(w.y - |y|^2/2)]``, w ~ N(0, I):
+
+    phi(x) = exp(W x - |x|^2/2) / sqrt(m),   W: (m, p) orthogonal blocks
+
+    out = phi(Q) (phi(K)^T V) / (phi(Q) (phi(K)^T 1))
+
+Orthogonal random features (QR of Gaussian blocks, row norms resampled from
+the chi distribution) for the variance reduction the paper uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001
+    return {}
+
+
+def _gram_schmidt(g: jax.Array) -> jax.Array:
+    """Row-orthonormalise a (p, p) Gaussian block.
+
+    Pure jnp (fori_loop of projections) instead of ``jnp.linalg.qr``: QR
+    lowers to a TYPED_FFI LAPACK custom-call that xla_extension 0.5.1
+    (the rust runtime) cannot execute — see DESIGN.md §6.
+    """
+    p = g.shape[0]
+
+    def body(i, q):
+        v = g[i]
+        # subtract projections onto the already-orthonormalised rows (< i)
+        mask = (jnp.arange(p) < i).astype(g.dtype)[:, None]
+        proj = (q * mask) @ v  # (p,) coefficients; rows >= i are zero
+        v = v - (q * mask).T @ proj
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-6)
+        return q.at[i].set(v)
+
+    q0 = jnp.zeros_like(g)
+    return jax.lax.fori_loop(0, p, body, q0)
+
+
+def _orthogonal_features(key: jax.Array, m: int, p: int) -> jax.Array:
+    """(m, p) random features with orthogonal p-blocks and chi row norms."""
+    blocks = []
+    n_blocks = -(-m // p)
+    keys = jax.random.split(key, n_blocks + 1)
+    for i in range(n_blocks):
+        g = jax.random.normal(keys[i], (p, p), jnp.float32)
+        blocks.append(_gram_schmidt(g))
+    w = jnp.concatenate(blocks, axis=0)[:m]
+    # chi(p) row norms = ||N(0, I_p)|| (avoids jax.random.chisquare's
+    # gamma-sampling while_loop — heavy in old-XLA text form)
+    norms = jnp.linalg.norm(
+        jax.random.normal(keys[-1], (m, p), jnp.float32), axis=-1
+    )
+    return w * norms[:, None]
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    m = cfg.num_features
+
+    def f(q2, k2, v2, subkey):
+        p = q2.shape[1]
+        w = _orthogonal_features(subkey, m, p)
+
+        def phi(x):
+            # stabiliser: subtract the max exponent (cancels in the ratio)
+            proj = x @ w.T
+            sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+            z = proj - sq
+            z = z - jnp.max(z)
+            return jnp.exp(z) / jnp.sqrt(m)
+
+        pq, pk = phi(q2), phi(k2)
+        num = pq @ (pk.T @ v2)
+        den = pq @ jnp.sum(pk, axis=0)[:, None]
+        return num / jnp.maximum(den, 1e-6)
+
+    return common.map_heads(f, q, k, v, key)

@@ -1,0 +1,65 @@
+"""Reformer-style LSH attention baseline (Kitaev et al. 2020), simplified.
+
+Single-round LSH: random-rotation hashing (argmax over [xR, -xR]) buckets
+tokens; positions are sorted by (bucket, position); queries attend within
+their sorted chunk plus the previous chunk, then results are unsorted.
+
+Simplifications vs. the released Reformer (documented in DESIGN.md):
+one hash round, no exact bucket masking inside chunks, and hashing on
+(q + k) rather than a tied-QK projection — the chunk budget is
+``2 * chunk_size = cfg.num_features`` keys per query, matching the paper's
+"128 visited elements per row" control.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001
+    return {}
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    chunk = max(8, cfg.num_features // 2)
+
+    def f(q2, k2, v2, subkey):
+        n, p = q2.shape
+        c = min(chunk, n)
+        pad = (-n) % c
+        if pad:
+            q2 = jnp.pad(q2, ((0, pad), (0, 0)))
+            k2 = jnp.pad(k2, ((0, pad), (0, 0)))
+            v2 = jnp.pad(v2, ((0, pad), (0, 0)))
+        np_ = q2.shape[0]
+        nc = np_ // c
+        n_buckets = max(2, nc)
+        r = jax.random.normal(subkey, (p, n_buckets), jnp.float32)
+        logits = (q2 + k2) @ r
+        buckets = jnp.argmax(jnp.concatenate([logits, -logits], axis=-1), axis=-1)
+        # stable sort by bucket: key = bucket * np_ + position
+        order = jnp.argsort(buckets * np_ + jnp.arange(np_))
+        inv = jnp.argsort(order)
+        qs, ks, vs = q2[order], k2[order], v2[order]
+        qc = qs.reshape(nc, c, p)
+        kc = ks.reshape(nc, c, p)
+        vc = vs.reshape(nc, c, -1)
+        # each chunk sees itself + previous chunk (wrap-around)
+        kcat = jnp.concatenate([jnp.roll(kc, 1, axis=0), kc], axis=1)
+        vcat = jnp.concatenate([jnp.roll(vc, 1, axis=0), vc], axis=1)
+        s = jnp.einsum("ncp,nmp->ncm", qc, kcat)
+        # mask padded positions (they carry bucket of zero-vectors)
+        if pad:
+            pos = jnp.concatenate(
+                [jnp.roll(order.reshape(nc, c), 1, axis=0), order.reshape(nc, c)],
+                axis=1,
+            )
+            s = jnp.where(pos[:, None, :] < n, s, -1e30)
+        w = common.row_softmax(s)
+        o = jnp.einsum("ncm,nmd->ncd", w, vcat).reshape(np_, -1)
+        return o[inv][:n]
+
+    return common.map_heads(f, q, k, v, key)

@@ -1,0 +1,40 @@
+"""Skyformer (paper §4.2): modified Nyström approximation of Kernelized
+Attention.
+
+Per head: sample ``d = cfg.num_features`` landmark rows uniformly from the
+lifted design matrix [Q; K] (Definition 1, without replacement — DESIGN.md
+§6), then
+
+    out = kappa(Q, L) (kappa(L, L) + gamma I)^{-1} kappa(L, K) V
+
+with the inverse computed by the Lemma-3-preconditioned Newton–Schulz
+iteration.  O(n d p + d^3) per head.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..kernels import autodiff, ref
+from . import common
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001
+    return {}
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    d_features = cfg.num_features
+
+    def f(q2, k2, v2, subkey):
+        two_n = q2.shape[0] + k2.shape[0]
+        lmk = ref.uniform_landmarks(subkey, two_n, min(d_features, two_n))
+        if cfg.pallas:
+            return autodiff.skyformer_attention(
+                q2, k2, v2, lmk, cfg.gamma, cfg.ns_iters
+            )
+        return ref.skyformer_attention(
+            q2, k2, v2, lmk, gamma=cfg.gamma, iters=cfg.ns_iters
+        )
+
+    return common.map_heads(f, q, k, v, key)

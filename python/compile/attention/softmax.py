@@ -1,0 +1,27 @@
+"""Vanilla self-attention baseline (Vaswani et al. 2017): softmax(QK^T/sqrt(p))V.
+
+The quadratic-cost reference every approximator in the paper is measured
+against (Table 1 "Self-Attention" row).  Two lowerings: the L1 Pallas
+online-softmax kernel (``cfg.pallas``) or the fused jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..kernels import autodiff, ref
+from . import common
+
+
+def init(key, cfg, seq_len):  # noqa: ARG001 - uniform module signature
+    return {}
+
+
+def apply(extra, q, k, v, key, cfg):  # noqa: ARG001
+    if cfg.pallas:
+        def f(q2, k2, v2, _key):
+            return autodiff.softmax_attention(q2, k2, v2)
+    else:
+        def f(q2, k2, v2, _key):
+            return ref.softmax_attention(q2, k2, v2)
+    return common.map_heads(f, q, k, v, key)

@@ -1,0 +1,84 @@
+"""Task and model configurations.
+
+Mirrors the paper's LRA protocol (§5 Implementation Details): a 2-layer
+transformer with 64 embedding dim, 128 hidden dim, 2 attention heads and
+mean pooling, the same model for every attention variant; only the attention
+module is swapped.  Sequence lengths are the CPU-budget "LRA-lite" variants
+recorded in DESIGN.md §5 — the rust coordinator (Layer 3) reads these via
+``artifacts/manifest.json`` so the three layers can never disagree on shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TaskConfig:
+    """One LRA task: shapes of the workload the rust data generators emit."""
+
+    name: str
+    seq_len: int
+    vocab_size: int
+    num_classes: int
+    batch_size: int
+    dual: bool = False  # Retrieval: two documents per example
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """The (fixed) LRA transformer + the pluggable attention settings."""
+
+    attention: str = "skyformer"
+    emb_dim: int = 64
+    ffn_dim: int = 128
+    num_heads: int = 2
+    num_layers: int = 2
+    # number of features / landmarks / projections / buckets — the paper
+    # controls this to 128 across methods for comparable complexity.
+    num_features: int = 128
+    ns_iters: int = 6  # Newton–Schulz iterations (§4.4)
+    gamma: float = 1e-3  # Lemma-3 ridge
+    block_size: int = 32  # bigbird / reformer chunk block
+    pallas: bool = False  # True: lower through the L1 Pallas kernels
+
+    @property
+    def head_dim(self) -> int:
+        assert self.emb_dim % self.num_heads == 0
+        return self.emb_dim // self.num_heads
+
+
+# LRA-lite task suite (paper sequence lengths in comments).
+TASKS: dict[str, TaskConfig] = {
+    # ListOps: hierarchical ops over nested lists (paper: 2k tokens).
+    "listops": TaskConfig("listops", seq_len=256, vocab_size=20, num_classes=10, batch_size=32),
+    # Byte-level text classification (paper: IMDb, 4k bytes).
+    "text": TaskConfig("text", seq_len=512, vocab_size=256, num_classes=2, batch_size=16),
+    # Document retrieval, dual tower (paper: AAN, 2 x 4k bytes).
+    "retrieval": TaskConfig(
+        "retrieval", seq_len=256, vocab_size=256, num_classes=2, batch_size=16, dual=True
+    ),
+    # Pathfinder 32x32 (paper: 1024 pixels — kept exact).
+    "pathfinder": TaskConfig("pathfinder", seq_len=1024, vocab_size=256, num_classes=2, batch_size=8),
+    # Image classification on 32x32 grayscale (paper: CIFAR-10 — 1024 pixels).
+    "image": TaskConfig("image", seq_len=1024, vocab_size=256, num_classes=10, batch_size=8),
+}
+
+ATTENTION_KINDS = (
+    "softmax",
+    "kernelized",
+    "skyformer",
+    "nystromformer",
+    "linformer",
+    "performer",
+    "reformer",
+    "informer",
+    "bigbird",
+)
+
+
+def model_for(attention: str, **overrides) -> ModelConfig:
+    if attention not in ATTENTION_KINDS:
+        raise ValueError(f"unknown attention {attention!r}; expected one of {ATTENTION_KINDS}")
+    return dataclasses.replace(ModelConfig(attention=attention), **overrides)

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp reference oracles.
+
+Public surface:
+
+* ``gaussian.kernelized_attention`` / ``gaussian.gaussian_scores``
+* ``softmax.softmax_attention``
+* ``newton_schulz.ns_inverse``
+* ``nystrom.skyformer_attention`` / ``nystrom.landmark_gram``
+* ``ref.*`` — the oracles every kernel is tested against
+"""
+
+from . import gaussian, newton_schulz, nystrom, ref, softmax  # noqa: F401

@@ -1,0 +1,94 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+``pallas_call`` has no transpose rule (in interpret mode or otherwise), so
+the training graphs cannot backprop through the raw kernels.  These wrappers
+pair the Pallas **forward** with the VJP of the mathematically identical
+pure-jnp reference (kernels.ref) as the **backward** — the standard
+fwd-kernel/bwd-kernel pairing, with the bwd half currently the XLA-fused
+reference.  pytest asserts both halves agree with finite differences.
+
+Dedicated Pallas backward kernels (flash-style recomputation) are the
+natural extension; the paper's contribution is the forward approximation,
+so the fused backward preserves every claim under test.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import gaussian as _gaussian
+from . import nystrom as _nystrom
+from . import ref as _ref
+from . import softmax as _softmax
+
+
+@jax.custom_vjp
+def kernelized_attention(q, k, v):
+    """Pallas kernelized attention with a differentiable (ref-VJP) backward."""
+    return _gaussian.kernelized_attention(q, k, v)
+
+
+def _ka_fwd(q, k, v):
+    return _gaussian.kernelized_attention(q, k, v), (q, k, v)
+
+
+def _ka_bwd(res, g):
+    q, k, v = res
+    return jax.vjp(_ref.kernelized_attention, q, k, v)[1](g)
+
+
+kernelized_attention.defvjp(_ka_fwd, _ka_bwd)
+
+
+@jax.custom_vjp
+def softmax_attention(q, k, v):
+    """Pallas online-softmax attention with a differentiable backward."""
+    return _softmax.softmax_attention(q, k, v)
+
+
+def _sm_fwd(q, k, v):
+    return _softmax.softmax_attention(q, k, v), (q, k, v)
+
+
+def _sm_bwd(res, g):
+    q, k, v = res
+    return jax.vjp(_ref.softmax_attention, q, k, v)[1](g)
+
+
+softmax_attention.defvjp(_sm_fwd, _sm_bwd)
+
+
+import functools
+
+import numpy as np
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def skyformer_attention(q, k, v, landmarks, gamma: float = 1e-3, iters: int = 6):
+    """Pallas Skyformer with a differentiable backward.
+
+    ``landmarks`` is an integer primal (sampled fresh per step); its
+    cotangent is the float0 zero JAX requires for integer inputs.  Gradients
+    w.r.t. q and k include the landmark-gather path (landmark rows *are*
+    rows of [Q; K]), exactly as in the reference.
+    """
+    return _nystrom.skyformer_attention(q, k, v, landmarks, gamma=gamma, iters=iters)
+
+
+def _sky_fwd(q, k, v, landmarks, gamma, iters):
+    out = _nystrom.skyformer_attention(q, k, v, landmarks, gamma=gamma, iters=iters)
+    return out, (q, k, v, landmarks)
+
+
+def _sky_bwd(gamma, iters, res, g):
+    q, k, v, landmarks = res
+
+    def ref_fn(q, k, v):
+        return _ref.skyformer_attention(q, k, v, landmarks, gamma=gamma, iters=iters)
+
+    dq, dk, dv = jax.vjp(ref_fn, q, k, v)[1](g)
+    d_lmk = np.zeros(landmarks.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, d_lmk
+
+
+skyformer_attention.defvjp(_sky_fwd, _sky_bwd)

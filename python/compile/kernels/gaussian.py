@@ -1,0 +1,134 @@
+"""Pallas kernel for Kernelized Attention (paper Eq. (3)).
+
+Schedule (the TPU remapping of the paper's V100 threadblock tiling, see
+DESIGN.md §Hardware-Adaptation):
+
+* grid over query-row tiles (``block_q`` rows each) — one program per tile;
+* each program streams K/V in ``block_k``-row tiles with a ``fori_loop``,
+  holding a ``(block_q, d_v)`` f32 accumulator in VMEM/registers;
+* the Gaussian kernel is computed in its matmul form
+  ``exp(q.k - ||q||^2/2 - ||k||^2/2)`` so the inner op is an MXU-shaped dot.
+
+VMEM footprint per program ≈ ``block_q*p + block_k*(p + d_v) + block_q*d_v``
+f32 words — with the default blocks (128, 128) and p = d_v = 64 that is
+~0.26 MiB, far under a TensorCore's 16 MiB VMEM, leaving room for
+double-buffered K/V streaming on real hardware.
+
+``interpret=True`` always: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ka_program(q_ref, k_ref, v_ref, o_ref, *, block_k: int, m_actual: int):
+    """One query tile of kernelized attention: ``o = kappa(q, K) @ V``."""
+    q = q_ref[...].astype(jnp.float32)  # (block_q, p)
+    qn = 0.5 * jnp.sum(q * q, axis=-1, keepdims=True)  # (block_q, 1)
+    m_padded = k_ref.shape[0]
+    d_v = v_ref.shape[1]
+    steps = m_padded // block_k
+
+    def body(j, acc):
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        k = k.astype(jnp.float32)
+        kn = 0.5 * jnp.sum(k * k, axis=-1)  # (block_k,)
+        s = jnp.exp(jnp.dot(q, k.T, preferred_element_type=jnp.float32) - qn - kn[None, :])
+        # Zero the contribution of padded key rows (kappa(q, 0) != 0).
+        idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(idx < m_actual, s, 0.0)
+        return acc + jnp.dot(s, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, steps, body, jnp.zeros((q.shape[0], d_v), jnp.float32)
+    )
+    o_ref[...] = acc
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def kernelized_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """``kappa(q, k) @ v`` for pre-scaled (n,p) q, (m,p) k, (m,d_v) v.
+
+    Arbitrary n/m are handled by zero-padding to block multiples; padded key
+    rows are masked inside the kernel, padded query rows are sliced off here.
+    """
+    n, _ = q.shape
+    m, _ = k.shape
+    block_q = min(block_q, max(8, n))
+    block_k = min(block_k, max(8, m))
+    qp = _pad_rows(q, block_q)
+    kp = _pad_rows(k, block_k)
+    vp = _pad_rows(v, block_k)
+    n_pad, p = qp.shape
+    m_pad = kp.shape[0]
+    d_v = vp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_ka_program, block_k=block_k, m_actual=m),
+        grid=(n_pad // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, p), lambda i: (i, 0)),
+            pl.BlockSpec((m_pad, p), lambda i: (0, 0)),
+            pl.BlockSpec((m_pad, d_v), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d_v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d_v), jnp.float32),
+        interpret=True,
+    )(qp, kp, vp)
+    return out[:n]
+
+
+def _scores_program(q_ref, k_ref, o_ref, *, m_actual: int):
+    """Materialised Gaussian score tile ``kappa(q_tile, K)`` (study/tests)."""
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    qn = 0.5 * jnp.sum(q * q, axis=-1, keepdims=True)
+    kn = 0.5 * jnp.sum(k * k, axis=-1)
+    s = jnp.exp(jnp.dot(q, k.T, preferred_element_type=jnp.float32) - qn - kn[None, :])
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    o_ref[...] = jnp.where(idx < m_actual, s, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def gaussian_scores(q: jax.Array, k: jax.Array, *, block_q: int = 128) -> jax.Array:
+    """Full (n, m) Gaussian kernel matrix via the tiled Pallas program."""
+    n = q.shape[0]
+    m = k.shape[0]
+    block_q = min(block_q, max(8, n))
+    qp = _pad_rows(q, block_q)
+    n_pad, p = qp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_scores_program, m_actual=m),
+        grid=(n_pad // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, p), lambda i: (i, 0)),
+            pl.BlockSpec((m, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, m), jnp.float32),
+        interpret=True,
+    )(qp, k)
+    return out[:n]

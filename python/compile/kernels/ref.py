@@ -1,0 +1,165 @@
+"""Pure-jnp reference oracles for every Layer-1 Pallas kernel.
+
+These are the correctness ground truth: pytest (including hypothesis shape
+sweeps) asserts each Pallas kernel in this package is allclose to the
+corresponding function here.  They are also the "fused" lowering path used
+inside the long-running training artifacts (see compile/attention/*), so the
+training graphs and the Pallas kernels are pinned to the same math.
+
+Conventions
+-----------
+* All attention-style functions take *pre-scaled* queries/keys: callers
+  multiply both ``q`` and ``k`` by ``p**-0.25`` so that ``q @ k.T`` equals
+  ``QK^T / sqrt(p)`` and the Gaussian kernel has the paper's bandwidth
+  ``p**(1/4)`` (Skyformer Eq. (1)/(3)).
+* Everything is f32-accumulated; inputs may be f32 or bf16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sq_half_norms(x: jax.Array) -> jax.Array:
+    """Row-wise ``||x_i||^2 / 2`` as an (n,) f32 vector."""
+    x = x.astype(jnp.float32)
+    return 0.5 * jnp.sum(x * x, axis=-1)
+
+
+def gaussian_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """Empirical Gaussian kernel matrix ``kappa(q_i, k_j) = exp(-||q_i-k_j||^2/2)``.
+
+    Expanded as ``exp(q.k - ||q||^2/2 - ||k||^2/2)`` so the hot op is a single
+    matmul (the form the Pallas kernel tiles).
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    return jnp.exp(q @ k.T - sq_half_norms(q)[:, None] - sq_half_norms(k)[None, :])
+
+
+def kernelized_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Kernelized Attention (paper Eq. (3)): ``C @ V`` with C = gaussian_scores.
+
+    No softmax normalisation: the Gaussian kernel's ``exp(-d^2/2)`` form *is*
+    the normalisation (C = D_Q^{-1/2} A D_K^{-1/2}, paper §4.1).
+    """
+    return gaussian_scores(q, k) @ v.astype(jnp.float32)
+
+
+def softmax_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Vanilla attention ``softmax(q k^T) v`` on pre-scaled q/k."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    s = q @ k.T
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    return (w / jnp.sum(w, axis=-1, keepdims=True)) @ v.astype(jnp.float32)
+
+
+def lifted_gaussian(q: jax.Array, k: jax.Array) -> jax.Array:
+    """PSD completion ``C_bar = kappa([Q;K], [Q;K])`` (paper Eq. (4))."""
+    x = jnp.concatenate([q, k], axis=0)
+    return gaussian_scores(x, x)
+
+
+def ns_preconditioner(m: jax.Array, gamma: float) -> tuple[jax.Array, jax.Array]:
+    """Lemma-3 preconditioning of a PSD ``m``.
+
+    Returns ``(m_hat, d_inv_sqrt)`` with
+    ``m_hat = D^{-1/2} (M + gamma I) D^{-1/2}``, ``D = diag((M + gamma I) 1)``.
+    Lemma 3 guarantees all singular values of ``m_hat`` lie in (0, 1), hence
+    ``||I - m_hat|| < 1`` and the Newton–Schulz iteration below converges.
+    """
+    m = m.astype(jnp.float32)
+    d = m.shape[0]
+    mg = m + gamma * jnp.eye(d, dtype=jnp.float32)
+    row = jnp.sum(mg, axis=1)
+    d_inv_sqrt = jax.lax.rsqrt(jnp.maximum(row, 1e-30))
+    m_hat = d_inv_sqrt[:, None] * mg * d_inv_sqrt[None, :]
+    return m_hat, d_inv_sqrt
+
+
+def ns_iterations(m_hat: jax.Array, iters: int) -> jax.Array:
+    """Razavi-type (order-3 hyperpower) iteration for ``m_hat^{-1}``.
+
+    ``Z_{t+1} = 1/4 Z_t (13 I - A Z_t (15 I - A Z_t (7 I - A Z_t)))`` — the
+    division-free scheme the paper adapts from Nyströmformer (§4.4), seeded
+    with ``Z_0 = A^T / (||A||_1 ||A||_inf)`` which converges for any A.
+    """
+    a = m_hat.astype(jnp.float32)
+    d = a.shape[0]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    n1 = jnp.max(jnp.sum(jnp.abs(a), axis=0))
+    ninf = jnp.max(jnp.sum(jnp.abs(a), axis=1))
+    z = a.T / jnp.maximum(n1 * ninf, 1e-30)
+
+    def body(_, z):
+        az = a @ z
+        return 0.25 * z @ (13.0 * eye - az @ (15.0 * eye - az @ (7.0 * eye - az)))
+
+    return jax.lax.fori_loop(0, iters, body, z)
+
+
+def ns_inverse(m: jax.Array, gamma: float = 1e-3, iters: int = 6) -> jax.Array:
+    """Approximate ``(M + gamma I)^{-1}`` of a PSD M via preconditioned NS.
+
+    ``(M+gI)^{-1} = D^{-1/2} m_hat^{-1} D^{-1/2}`` — the workaround of §4.4.
+    """
+    m_hat, d_inv_sqrt = ns_preconditioner(m, gamma)
+    z = ns_iterations(m_hat, iters)
+    return d_inv_sqrt[:, None] * z * d_inv_sqrt[None, :]
+
+
+def skyformer_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    landmarks: jax.Array,
+    gamma: float = 1e-3,
+    iters: int = 6,
+    exact_pinv: bool = False,
+) -> jax.Array:
+    """Skyformer (paper Eq. (4)-(6)) on pre-scaled q/k.
+
+    ``landmarks`` is an (d,) int array of row indices into ``[Q; K]``
+    (the uniform sub-sampling S; the 1/sqrt(d) column scaling of
+    Definition 1 cancels algebraically in B S (S^T B S)^+ S^T B).
+
+    Output: ``kappa(Q, L) (kappa(L, L) + gamma I)^{-1} kappa(L, K) V`` — the
+    top-right n-by-n block of the Nyström approximation of the lifted PSD
+    matrix C_bar, applied to V without materialising any n-by-n matrix.
+    """
+    x = jnp.concatenate([q, k], axis=0).astype(jnp.float32)
+    lm = x[landmarks]  # (d, p)
+    c_ql = gaussian_scores(q, lm)  # (n, d)
+    c_lk = gaussian_scores(lm, k)  # (d, n)
+    m = gaussian_scores(lm, lm)  # (d, d) PSD
+    if exact_pinv:
+        d = m.shape[0]
+        inv = jnp.linalg.pinv(m + gamma * jnp.eye(d, dtype=jnp.float32))
+    else:
+        inv = ns_inverse(m, gamma=gamma, iters=iters)
+    return c_ql @ (inv @ (c_lk @ v.astype(jnp.float32)))
+
+
+def skyformer_scores(
+    q: jax.Array,
+    k: jax.Array,
+    landmarks: jax.Array,
+    gamma: float = 1e-3,
+    iters: int = 6,
+) -> jax.Array:
+    """Materialised n-by-n Skyformer score matrix (tests / approx study only)."""
+    n = q.shape[0]
+    eye = jnp.eye(n, dtype=jnp.float32)
+    return skyformer_attention(q, k, eye, landmarks, gamma=gamma, iters=iters)
+
+
+def uniform_landmarks(key: jax.Array, two_n: int, d: int) -> jax.Array:
+    """Sample d landmark indices from [0, 2n) without replacement.
+
+    Definition 1 samples with replacement; without-replacement is the
+    strictly-lower-variance practical variant (DESIGN.md §6).
+    """
+    return jax.random.choice(key, two_n, shape=(d,), replace=False)

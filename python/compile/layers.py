@@ -1,0 +1,79 @@
+"""Transformer building blocks for the LRA classifier (Layer 2).
+
+Pre-LN blocks (stability — the phenomenon the paper studies is the
+*attention* conditioning, not the residual-path variant; DESIGN.md §6), mean
+pooling, learned positional embeddings — the 2-layer / 64-dim / 128-ffn /
+2-head configuration of the paper's §5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attention_registry
+from .configs import ModelConfig
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int) -> dict:
+    """Glorot-uniform dense layer parameters."""
+    lim = jnp.sqrt(6.0 / (d_in + d_out))
+    w = jax.random.uniform(key, (d_in, d_out), jnp.float32, -lim, lim)
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def layer_norm_init(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layer_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def block_init(key: jax.Array, cfg: ModelConfig, seq_len: int) -> dict:
+    kq, kk, kv, ko, k1, k2, ka = jax.random.split(key, 7)
+    e = cfg.emb_dim
+    attn_mod = attention_registry.get(cfg.attention)
+    return {
+        "ln1": layer_norm_init(e),
+        "wq": dense_init(kq, e, e),
+        "wk": dense_init(kk, e, e),
+        "wv": dense_init(kv, e, e),
+        "wo": dense_init(ko, e, e),
+        "attn": attn_mod.init(ka, cfg, seq_len),
+        "ln2": layer_norm_init(e),
+        "ff1": dense_init(k1, e, cfg.ffn_dim),
+        "ff2": dense_init(k2, cfg.ffn_dim, e),
+    }
+
+
+def _split_heads(x: jax.Array, num_heads: int) -> jax.Array:
+    b, n, e = x.shape
+    return x.reshape(b, n, num_heads, e // num_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, n, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
+
+
+def block_apply(p: dict, x: jax.Array, key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """One pre-LN transformer block with the configured attention."""
+    attn_mod = attention_registry.get(cfg.attention)
+    h = layer_norm(p["ln1"], x)
+    q = _split_heads(dense(p["wq"], h), cfg.num_heads)
+    k = _split_heads(dense(p["wk"], h), cfg.num_heads)
+    v = _split_heads(dense(p["wv"], h), cfg.num_heads)
+    # pre-scale q and k by p^-1/4: q.k^T == QK^T/sqrt(p), Gaussian bandwidth p^1/4
+    scale = float(cfg.head_dim) ** -0.25
+    out = attn_mod.apply(p["attn"], q * scale, k * scale, v, key, cfg)
+    x = x + dense(p["wo"], _merge_heads(out))
+    h = layer_norm(p["ln2"], x)
+    h = jax.nn.gelu(dense(p["ff1"], h))
+    return x + dense(p["ff2"], h)

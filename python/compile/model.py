@@ -1,0 +1,58 @@
+"""The LRA classifier (Layer 2): paper §5's 2-layer transformer.
+
+Single-tower for ListOps / Text / Pathfinder / Image; dual-tower (shared
+encoder, feature-interaction head) for Retrieval — the LRA protocol.
+
+All functions are pure: ``params`` is a pytree, randomness enters through an
+explicit key (consumed by the stochastic attention approximators).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig, TaskConfig
+
+
+def init_params(key: jax.Array, task: TaskConfig, cfg: ModelConfig) -> dict:
+    ke, kp, kh, *kb = jax.random.split(key, 3 + cfg.num_layers)
+    e = cfg.emb_dim
+    head_in = 3 * e if task.dual else e
+    return {
+        "embed": jax.random.normal(ke, (task.vocab_size, e), jnp.float32) * 0.02,
+        "pos": jax.random.normal(kp, (task.seq_len, e), jnp.float32) * 0.02,
+        "blocks": [layers.block_init(k, cfg, task.seq_len) for k in kb],
+        "ln_f": layers.layer_norm_init(e),
+        "head": layers.dense_init(kh, head_in, task.num_classes),
+    }
+
+
+def encode(params: dict, tokens: jax.Array, key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, N) int32 tokens -> (B, E) mean-pooled features."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1]]
+    keys = jax.random.split(key, len(params["blocks"]))
+    for p_block, k_block in zip(params["blocks"], keys):
+        x = layers.block_apply(p_block, x, k_block, cfg)
+    x = layers.layer_norm(params["ln_f"], x)
+    return jnp.mean(x, axis=1)
+
+
+def forward(params: dict, tokens: jax.Array, key: jax.Array, task: TaskConfig, cfg: ModelConfig) -> jax.Array:
+    """Logits. ``tokens``: (B, N) int32, or (B, 2, N) for dual-tower tasks."""
+    if task.dual:
+        k1, k2 = jax.random.split(key)
+        e1 = encode(params, tokens[:, 0], k1, cfg)
+        e2 = encode(params, tokens[:, 1], k2, cfg)
+        feats = jnp.concatenate([e1, e2, e1 * e2], axis=-1)
+    else:
+        feats = encode(params, tokens, key, cfg)
+    return layers.dense(params["head"], feats)
+
+
+def token_shape(task: TaskConfig) -> tuple[int, ...]:
+    """Shape of one batch of tokens for this task."""
+    if task.dual:
+        return (task.batch_size, 2, task.seq_len)
+    return (task.batch_size, task.seq_len)

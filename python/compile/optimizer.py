@@ -1,0 +1,44 @@
+"""Adam, in-graph (Layer 2).
+
+The optimizer lives inside the train-step HLO so the rust coordinator only
+round-trips opaque leaf tensors between steps — no optimizer math on the
+request path.  Learning rate is a runtime scalar input (the L3 scheduler
+owns the schedule).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params) -> dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.float32),
+    }
+
+
+def update(
+    grads,
+    state: dict,
+    params,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """One Adam step with bias correction. Returns (params', state')."""
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def leaf(p, m_, v_):
+        return p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+
+    new_params = jax.tree_util.tree_map(leaf, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}

@@ -1,0 +1,70 @@
+"""Train / eval / embed step functions — the units that get AOT-lowered.
+
+Each returned function is pure and jit-able:
+
+* ``train_step(params, opt, tokens, labels, seed, lr)``
+  -> ``(params', opt', loss, acc)`` — fwd + bwd + Adam, one HLO module.
+* ``eval_step(params, tokens, labels, seed)`` -> ``(loss, acc)``
+* ``embed_step(params, tokens, seed)`` -> pooled features (Table 3's f(x, W))
+* ``init_step(seed)`` -> ``(params, opt)`` — so the rust coordinator can
+  re-initialise for seed sweeps without touching python.
+
+``seed`` is a uint32 scalar input; the PRNG key is derived in-graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model, optimizer
+from .configs import ModelConfig, TaskConfig
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def _accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def make_fns(task: TaskConfig, cfg: ModelConfig) -> dict:
+    def loss_fn(params, tokens, labels, key):
+        logits = model.forward(params, tokens, key, task, cfg)
+        loss = _xent(logits, labels)
+        return loss, _accuracy(logits, labels)
+
+    def train_step(params, opt, tokens, labels, seed, lr):
+        key = jax.random.PRNGKey(seed)
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, labels, key
+        )
+        params, opt = optimizer.update(grads, opt, params, lr)
+        return params, opt, loss, acc
+
+    def eval_step(params, tokens, labels, seed):
+        key = jax.random.PRNGKey(seed)
+        return loss_fn(params, tokens, labels, key)
+
+    def embed_step(params, tokens, seed):
+        key = jax.random.PRNGKey(seed)
+        if task.dual:
+            k1, k2 = jax.random.split(key)
+            e1 = model.encode(params, tokens[:, 0], k1, cfg)
+            e2 = model.encode(params, tokens[:, 1], k2, cfg)
+            return jnp.concatenate([e1, e2], axis=-1)
+        return model.encode(params, tokens, key, cfg)
+
+    def init_step(seed):
+        key = jax.random.PRNGKey(seed)
+        params = model.init_params(key, task, cfg)
+        return params, optimizer.init(params)
+
+    return {
+        "train": train_step,
+        "eval": eval_step,
+        "embed": embed_step,
+        "init": init_step,
+    }

@@ -1,0 +1,9 @@
+"""Make `compile` importable whether pytest runs from repo root
+(`pytest python/tests/`) or from `python/` (`pytest tests/`)."""
+
+import sys
+from pathlib import Path
+
+_PYTHON_DIR = str(Path(__file__).resolve().parents[1])
+if _PYTHON_DIR not in sys.path:
+    sys.path.insert(0, _PYTHON_DIR)

@@ -1,0 +1,102 @@
+"""AOT lowering tests: artifacts are parseable HLO text with manifests that
+agree with the actual lowered signatures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model, train_step
+
+
+@pytest.fixture(scope="module")
+def tiny_entries(tmp_path_factory):
+    """Lower a tiny config once for all tests in this module."""
+    out = tmp_path_factory.mktemp("artifacts")
+    # shrink the task so lowering is fast
+    orig = configs.TASKS["listops"]
+    configs.TASKS["listops"] = dataclasses.replace(orig, seq_len=64, batch_size=2)
+    try:
+        entries = aot.lower_config("listops", "skyformer", out, kinds=("init", "train", "eval", "embed"))
+    finally:
+        configs.TASKS["listops"] = orig
+    return out, entries
+
+
+def test_artifact_files_exist_and_are_hlo(tiny_entries):
+    out, entries = tiny_entries
+    assert len(entries) == 4
+    for e in entries:
+        text = (out / e["file"]).read_text()
+        assert text.startswith("HloModule"), e["file"]
+        assert "ENTRY" in text
+
+
+def test_manifest_input_count_matches_hlo_params(tiny_entries):
+    out, entries = tiny_entries
+    for e in entries:
+        text = (out / e["file"]).read_text()
+        # count parameter() instructions inside the ENTRY computation only
+        lines = text.splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        n_declared = 0
+        for l in lines[start + 1 :]:
+            if l.strip() == "}":
+                break
+            if " parameter(" in l:
+                n_declared += 1
+        assert n_declared == len(e["inputs"]), (e["name"], n_declared, len(e["inputs"]))
+
+
+def test_train_signature_roundtrip(tiny_entries):
+    _, entries = tiny_entries
+    train = next(e for e in entries if e["kind"] == "train")
+    n_p, n_o = train["num_params"], train["num_opt"]
+    assert len(train["inputs"]) == n_p + n_o + 4  # tokens, labels, seed, lr
+    assert len(train["outputs"]) == n_p + n_o + 2  # loss, acc
+    # params leaves appear with identical specs in inputs and outputs
+    for i in range(n_p + n_o):
+        assert train["inputs"][i]["name"] == train["outputs"][i]["name"]
+        assert train["inputs"][i]["shape"] == train["outputs"][i]["shape"]
+
+
+def test_init_outputs_match_train_param_inputs(tiny_entries):
+    _, entries = tiny_entries
+    train = next(e for e in entries if e["kind"] == "train")
+    init = next(e for e in entries if e["kind"] == "init")
+    n_state = train["num_params"] + train["num_opt"]
+    assert [o["name"] for o in init["outputs"]] == [
+        i["name"] for i in train["inputs"][:n_state]
+    ]
+
+
+def test_leaf_names_unique(tiny_entries):
+    _, entries = tiny_entries
+    train = next(e for e in entries if e["kind"] == "train")
+    names = [i["name"] for i in train["inputs"]]
+    assert len(names) == len(set(names))
+
+
+def test_dtype_vocabulary(tiny_entries):
+    _, entries = tiny_entries
+    for e in entries:
+        for spec in e["inputs"] + e["outputs"]:
+            assert spec["dtype"] in ("f32", "i32", "u32")
+
+
+def test_smoke_manifest_consistent_if_present():
+    """If `make artifacts` ran, validate the real manifest."""
+    mpath = Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+    if not mpath.exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads(mpath.read_text())
+    for name, e in manifest["artifacts"].items():
+        assert (mpath.parent / e["file"]).exists(), name
+        assert e["task"] in configs.TASKS
+        assert e["attention"] in configs.ATTENTION_KINDS

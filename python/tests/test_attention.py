@@ -1,0 +1,144 @@
+"""L2 attention-module contract tests: every registry entry obeys the same
+interface, is finite, has the right shape, and the stochastic approximators
+actually approximate their targets.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import attention, configs
+from compile.kernels import ref
+
+B, H, N, D = 2, 2, 128, 16
+
+
+def _qkv(seed=0, n=N):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    shape = (B, H, n, D)
+    scale = D**-0.25
+    q = jax.random.normal(kq, shape) * 0.5 * scale
+    k = jax.random.normal(kk, shape) * 0.5 * scale
+    v = jax.random.normal(kv, (B, H, n, D))
+    return q, k, v
+
+
+@pytest.mark.parametrize("name", configs.ATTENTION_KINDS)
+def test_shape_and_finiteness(name):
+    cfg = configs.model_for(name, num_features=32)
+    mod = attention.get(name)
+    q, k, v = _qkv()
+    extra = mod.init(jax.random.PRNGKey(1), cfg, N)
+    out = mod.apply(extra, q, k, v, jax.random.PRNGKey(2), cfg)
+    assert out.shape == (B, H, N, D)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("name", configs.ATTENTION_KINDS)
+def test_jit_and_grad(name):
+    """Every module must jit and be differentiable w.r.t. q, k, v."""
+    cfg = configs.model_for(name, num_features=16)
+    mod = attention.get(name)
+    q, k, v = _qkv(3, n=64)
+    extra = mod.init(jax.random.PRNGKey(1), cfg, 64)
+
+    @jax.jit
+    def loss(q, k, v):
+        out = mod.apply(extra, q, k, v, jax.random.PRNGKey(2), cfg)
+        return jnp.sum(out**2)
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for gi in g:
+        assert bool(jnp.all(jnp.isfinite(gi)))
+    # v-grad must never be all-zero (information must flow)
+    assert float(jnp.max(jnp.abs(g[2]))) > 0
+
+
+def test_softmax_module_matches_reference_attention():
+    cfg = configs.model_for("softmax")
+    mod = attention.get("softmax")
+    q, k, v = _qkv(5)
+    out = mod.apply({}, q, k, v, jax.random.PRNGKey(0), cfg)
+    want = jax.vmap(jax.vmap(ref.softmax_attention))(q, k, v)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_and_fused_paths_agree():
+    """cfg.pallas flips the lowering, not the math."""
+    for name in ("softmax", "kernelized", "skyformer"):
+        q, k, v = _qkv(7)
+        outs = []
+        for pallas in (False, True):
+            cfg = configs.model_for(name, pallas=pallas, num_features=48)
+            mod = attention.get(name)
+            out = mod.apply({}, q, k, v, jax.random.PRNGKey(9), cfg)
+            outs.append(np.asarray(out))
+        np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+def test_skyformer_approximates_kernelized():
+    """With a generous landmark budget Skyformer ~= Kernelized Attention."""
+    q, k, v = _qkv(11)
+    mod_ka = attention.get("kernelized")
+    want = np.asarray(mod_ka.apply({}, q, k, v, jax.random.PRNGKey(0), configs.model_for("kernelized")))
+    cfg = configs.model_for("skyformer", num_features=256, ns_iters=12)
+    mod = attention.get("skyformer")
+    got = np.asarray(mod.apply({}, q, k, v, jax.random.PRNGKey(1), cfg))
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.15, rel
+
+    # and the error shrinks with the budget (paper §4.5)
+    cfg_small = configs.model_for("skyformer", num_features=8, ns_iters=12)
+    small = np.asarray(mod.apply({}, q, k, v, jax.random.PRNGKey(1), cfg_small))
+    rel_small = np.linalg.norm(small - want) / np.linalg.norm(want)
+    assert rel < rel_small, (rel, rel_small)
+
+
+def test_performer_approximates_softmax():
+    q, k, v = _qkv(13)
+    want = np.asarray(
+        attention.get("softmax").apply({}, q, k, v, jax.random.PRNGKey(0), configs.model_for("softmax"))
+    )
+    cfg = configs.model_for("performer", num_features=512)
+    got = np.asarray(attention.get("performer").apply({}, q, k, v, jax.random.PRNGKey(3), cfg))
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.35, rel
+
+
+def test_nystromformer_approximates_softmax():
+    q, k, v = _qkv(17)
+    want = np.asarray(
+        attention.get("softmax").apply({}, q, k, v, jax.random.PRNGKey(0), configs.model_for("softmax"))
+    )
+    cfg = configs.model_for("nystromformer", num_features=64, ns_iters=10)
+    got = np.asarray(attention.get("nystromformer").apply({}, q, k, v, jax.random.PRNGKey(3), cfg))
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.5, rel
+
+
+def test_linformer_params_created_and_used():
+    cfg = configs.model_for("linformer", num_features=32)
+    mod = attention.get("linformer")
+    extra = mod.init(jax.random.PRNGKey(0), cfg, N)
+    assert extra["proj_e"].shape == (32, N)
+    q, k, v = _qkv(19)
+    out1 = mod.apply(extra, q, k, v, jax.random.PRNGKey(1), cfg)
+    extra2 = jax.tree_util.tree_map(lambda x: x * 2.0, extra)
+    out2 = mod.apply(extra2, q, k, v, jax.random.PRNGKey(1), cfg)
+    assert float(jnp.max(jnp.abs(out1 - out2))) > 1e-6  # params matter
+
+
+def test_odd_sequence_lengths():
+    """Non-power-of-two lengths exercise every module's padding path."""
+    for name in configs.ATTENTION_KINDS:
+        cfg = configs.model_for(name, num_features=16, block_size=16)
+        mod = attention.get(name)
+        q, k, v = _qkv(23, n=67)
+        extra = mod.init(jax.random.PRNGKey(1), cfg, 67)
+        out = mod.apply(extra, q, k, v, jax.random.PRNGKey(2), cfg)
+        assert out.shape == (B, H, 67, D), name
+        assert bool(jnp.all(jnp.isfinite(out))), name

@@ -1,0 +1,92 @@
+"""custom_vjp wrappers: Pallas forward must pair with a backward that matches
+the reference gradients (the wrappers exist because pallas_call has no
+transpose rule — see kernels/autodiff.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import autodiff, ref
+
+
+def _qkv(seed=0, n=48, m=40, p=16, d_v=8):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (n, p)) * 0.4
+    k = jax.random.normal(kk, (m, p)) * 0.4
+    v = jax.random.normal(kv, (m, d_v))
+    return q, k, v
+
+
+def _check_grads(wrapped, reference, args, tol=1e-4):
+    def loss_w(*a):
+        return jnp.sum(wrapped(*a) ** 2)
+
+    def loss_r(*a):
+        return jnp.sum(reference(*a) ** 2)
+
+    gw = jax.grad(loss_w, argnums=tuple(range(len(args))))(*args)
+    gr = jax.grad(loss_r, argnums=tuple(range(len(args))))(*args)
+    for a, b in zip(gw, gr):
+        np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+
+
+def test_kernelized_grads_match_ref():
+    q, k, v = _qkv(1)
+    _check_grads(autodiff.kernelized_attention, ref.kernelized_attention, (q, k, v))
+
+
+def test_softmax_grads_match_ref():
+    q, k, v = _qkv(2)
+    _check_grads(autodiff.softmax_attention, ref.softmax_attention, (q, k, v))
+
+
+def test_skyformer_grads_match_ref():
+    q, k, v = _qkv(3)
+    lmk = ref.uniform_landmarks(jax.random.PRNGKey(0), q.shape[0] + k.shape[0], 24)
+
+    def wrapped(q, k, v):
+        return autodiff.skyformer_attention(q, k, v, lmk, 1e-3, 8)
+
+    def reference(q, k, v):
+        return ref.skyformer_attention(q, k, v, lmk, gamma=1e-3, iters=8)
+
+    _check_grads(wrapped, reference, (q, k, v), tol=5e-4)
+
+
+def test_finite_difference_directional():
+    """Forward-mode sanity: directional derivative vs finite differences."""
+    q, k, v = _qkv(4, n=24, m=20, p=8, d_v=4)
+    key = jax.random.PRNGKey(9)
+    dq = jax.random.normal(key, q.shape) * 1.0
+
+    def f(q_):
+        return jnp.sum(autodiff.kernelized_attention(q_, k, v) ** 2)
+
+    g = jax.grad(f)(q)
+    analytic = float(jnp.sum(g * dq))
+    eps = 1e-3
+    numeric = (float(f(q + eps * dq)) - float(f(q - eps * dq))) / (2 * eps)
+    assert abs(analytic - numeric) < 3e-2 * max(1.0, abs(analytic)), (analytic, numeric)
+
+
+def test_vjp_under_vmap():
+    """The wrappers must survive vmap (how attention modules call them)."""
+    b = 3
+    qs = jnp.stack([_qkv(i)[0] for i in range(b)])
+    ks = jnp.stack([_qkv(i)[1] for i in range(b)])
+    vs = jnp.stack([_qkv(i)[2] for i in range(b)])
+
+    def loss(q, k, v):
+        return jnp.sum(jax.vmap(autodiff.kernelized_attention)(q, k, v) ** 2)
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(qs, ks, vs)
+    want = jax.grad(
+        lambda q, k, v: jnp.sum(jax.vmap(ref.kernelized_attention)(q, k, v) ** 2),
+        argnums=(0, 1, 2),
+    )(qs, ks, vs)
+    for a, b_ in zip(g, want):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,141 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes (the session guide's required pattern); each
+property asserts allclose against kernels.ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gaussian, newton_schulz, nystrom, ref, softmax
+
+SETTINGS = dict(deadline=None, max_examples=12)
+
+
+def _qkv(seed: int, n: int, m: int, p: int, d_v: int, dtype, scale=0.6):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = (jax.random.normal(kq, (n, p), jnp.float32) * scale).astype(dtype)
+    k = (jax.random.normal(kk, (m, p), jnp.float32) * scale).astype(dtype)
+    v = (jax.random.normal(kv, (m, d_v), jnp.float32)).astype(dtype)
+    return q, k, v
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 300),  # n
+    st.integers(1, 300),  # m
+    st.sampled_from([4, 16, 32, 64]),  # p
+    st.sampled_from([8, 32, 64]),  # d_v
+    st.integers(0, 2**31 - 1),  # seed
+)
+
+
+@given(shape_strategy, st.sampled_from([jnp.float32, jnp.bfloat16]))
+@settings(**SETTINGS)
+def test_kernelized_attention_matches_ref(dims, dtype):
+    n, m, p, d_v, seed = dims
+    q, k, v = _qkv(seed, n, m, p, d_v, dtype)
+    got = gaussian.kernelized_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.kernelized_attention(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@given(shape_strategy, st.sampled_from([jnp.float32, jnp.bfloat16]))
+@settings(**SETTINGS)
+def test_softmax_attention_matches_ref(dims, dtype):
+    n, m, p, d_v, seed = dims
+    q, k, v = _qkv(seed, n, m, p, d_v, dtype)
+    got = softmax.softmax_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.softmax_attention(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_gaussian_scores_matches_ref(dims):
+    n, m, p, _, seed = dims
+    q, k, _ = _qkv(seed, n, m, p, 8, jnp.float32)
+    got = gaussian.gaussian_scores(q, k, block_q=64)
+    want = ref.gaussian_scores(q, k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    st.integers(2, 96),  # d (landmarks)
+    st.sampled_from([4, 16, 32]),
+    st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ns_inverse_matches_exact(d, p, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (d, p), jnp.float32) * 0.5
+    m = ref.gaussian_scores(x, x)  # PSD
+    # low-dim Gaussian grams reach cond ~1e5 with gamma=1e-3; NS needs ~30
+    # iterations to hit the f32 floor (~3e-4 relative) there.
+    got = newton_schulz.ns_inverse(m, gamma=1e-3, iters=30)
+    want = np.linalg.inv(np.asarray(m) + 1e-3 * np.eye(d, dtype=np.float32))
+    scale = np.max(np.abs(want))
+    np.testing.assert_allclose(got / scale, want / scale, atol=2e-3)
+
+
+@given(shape_strategy, st.integers(4, 64))
+@settings(**SETTINGS)
+def test_skyformer_matches_ref(dims, n_landmarks):
+    n, m, p, d_v, seed = dims
+    q, k, v = _qkv(seed, n, m, p, d_v, jnp.float32)
+    d = min(n_landmarks, n + m)
+    lmk = ref.uniform_landmarks(jax.random.PRNGKey(seed ^ 0x5EED), n + m, d)
+    got = nystrom.skyformer_attention(q, k, v, lmk, iters=8, block_q=64, block_k=64)
+    want = ref.skyformer_attention(q, k, v, lmk, iters=8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_kernelized_attention_identity_case():
+    """kappa(x, x) has unit diagonal: KA of a single token returns v."""
+    q = jnp.ones((1, 8)) * 0.3
+    v = jnp.arange(8, dtype=jnp.float32)[None, :]
+    out = gaussian.kernelized_attention(q, q, v)
+    np.testing.assert_allclose(out, v, rtol=1e-6)
+
+
+def test_gaussian_scores_range():
+    """Gaussian kernel values always lie in (0, 1]."""
+    q, k, _ = _qkv(7, 100, 90, 16, 8, jnp.float32, scale=2.0)
+    s = np.asarray(gaussian.gaussian_scores(q, k))
+    assert s.max() <= 1.0 + 1e-6
+    # mathematically > 0; far pairs underflow to +0.0 in f32
+    assert s.min() >= 0.0
+    assert (s > 0).any()
+
+
+def test_softmax_rows_sum_to_one_via_ones_value():
+    """softmax attention with V = 1 returns exactly 1 (row-stochastic)."""
+    q, k, _ = _qkv(3, 130, 70, 16, 4, jnp.float32)
+    v = jnp.ones((70, 4), jnp.float32)
+    out = softmax.softmax_attention(q, k, v)
+    np.testing.assert_allclose(out, np.ones((130, 4)), rtol=1e-5)
+
+
+def test_landmark_gram_is_symmetric_psd():
+    q, k, _ = _qkv(11, 80, 80, 16, 8, jnp.float32)
+    lmk = ref.uniform_landmarks(jax.random.PRNGKey(0), 160, 32)
+    m = np.asarray(nystrom.landmark_gram(q, k, lmk))
+    np.testing.assert_allclose(m, m.T, atol=1e-6)
+    w = np.linalg.eigvalsh(m)
+    assert w.min() > -1e-4
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 8), (32, 128), (128, 32), (256, 256)])
+def test_block_shape_invariance(block_q, block_k):
+    """Output must not depend on the BlockSpec tiling."""
+    q, k, v = _qkv(5, 200, 170, 32, 32, jnp.float32)
+    base = ref.kernelized_attention(q, k, v)
+    got = gaussian.kernelized_attention(q, k, v, block_q=block_q, block_k=block_k)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,140 @@
+"""Properties of the modified Nyström method — the paper's §4.2–§4.4 claims.
+
+These are the *mathematical* invariants (Lemma 1, Lemma 3, Theorem 2's
+error form, and the §4.5 monotonicity claim), tested numerically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=10)
+
+
+def _qk(seed: int, n: int, p: int, scale=0.7):
+    key = jax.random.PRNGKey(seed)
+    kq, kk = jax.random.split(key)
+    q = jax.random.normal(kq, (n, p), jnp.float32) * scale
+    k = jax.random.normal(kk, (n, p), jnp.float32) * scale
+    return q, k
+
+
+@given(st.integers(2, 120), st.sampled_from([4, 16, 32]), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_lemma1_lifted_matrix_is_psd(n, p, seed):
+    """Lemma 1 / Eq. (4): C_bar = kappa([Q;K],[Q;K]) is PSD."""
+    q, k = _qk(seed, n, p)
+    cbar = np.asarray(ref.lifted_gaussian(q, k))
+    np.testing.assert_allclose(cbar, cbar.T, atol=1e-6)
+    w = np.linalg.eigvalsh(cbar)
+    assert w.min() > -1e-3 * max(1.0, w.max())
+
+
+@given(st.integers(2, 80), st.sampled_from([4, 16]), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_lemma3_preconditioned_singular_values_in_unit_interval(n, p, seed):
+    """Lemma 3: all singular values of D^{-1/2}(M+gI)D^{-1/2} in (0,1)."""
+    q, k = _qk(seed, n, p)
+    d = min(32, 2 * n)
+    lmk = ref.uniform_landmarks(jax.random.PRNGKey(seed ^ 1), 2 * n, d)
+    x = jnp.concatenate([q, k], axis=0)[lmk]
+    m = ref.gaussian_scores(x, x)
+    m_hat, _ = ref.ns_preconditioner(m, gamma=1e-3)
+    # strict in exact arithmetic; f32 rounding can land exactly on 1.0
+    sv = np.linalg.svd(np.asarray(m_hat, dtype=np.float64), compute_uv=False)
+    assert sv.max() <= 1.0 + 1e-6
+    assert sv.min() > 0.0
+    # the exact statement: ||I - m_hat|| < 1
+    resid = np.linalg.norm(np.eye(m.shape[0]) - np.asarray(m_hat, np.float64), 2)
+    assert resid < 1.0 + 1e-6
+
+
+def test_ns_iteration_converges_to_inverse():
+    """NS residual decreases monotonically to ~0 on a preconditioned PSD M."""
+    q, k = _qk(42, 64, 16)
+    lmk = ref.uniform_landmarks(jax.random.PRNGKey(7), 128, 48)
+    x = jnp.concatenate([q, k], axis=0)[lmk]
+    m = ref.gaussian_scores(x, x)
+    m_hat, _ = ref.ns_preconditioner(m, gamma=1e-3)
+    eye = np.eye(48, dtype=np.float32)
+    prev = np.inf
+    for iters in (1, 3, 6, 10, 16):
+        z = np.asarray(ref.ns_iterations(m_hat, iters))
+        resid = np.linalg.norm(eye - np.asarray(m_hat) @ z, 2)
+        assert resid <= prev + 1e-5, f"residual rose at iters={iters}"
+        prev = resid
+    assert prev < 1e-4
+
+
+def test_theorem2_error_form():
+    """||C_tilde - C|| <= lambda where C_tilde uses exact pinv and
+    lambda is calibrated from the tail eigenvalues of C_bar.
+
+    Theorem 2 is probabilistic in S; here we check the deterministic core:
+    the Nyström error of the lifted PSD matrix upper-bounds the off-diagonal
+    block error (Eq. after (6)), and grows no faster than the tail mass.
+    """
+    n, p, d = 96, 16, 64
+    q, k = _qk(3, n, p, scale=0.5)
+    c = np.asarray(ref.gaussian_scores(q, k))
+    cbar = np.asarray(ref.lifted_gaussian(q, k))
+    lmk = np.asarray(ref.uniform_landmarks(jax.random.PRNGKey(1), 2 * n, d))
+    # full lifted Nystrom: C_bar S (S^T C_bar S)^+ S^T C_bar
+    cs = cbar[:, lmk]
+    w = np.linalg.pinv(cbar[np.ix_(lmk, lmk)], rcond=1e-10)
+    cbar_tilde = cs @ w @ cs.T
+    block = cbar_tilde[:n, n:]
+    err_block = np.linalg.norm(c - block, 2)
+    err_lift = np.linalg.norm(cbar - cbar_tilde, 2)
+    # ||C - C_tilde|| = ||(I,0)(Cbar - Cbar_tilde)(0,I)^T|| <= ||Cbar - Cbar_tilde||
+    assert err_block <= err_lift + 1e-4
+    # Loewner sandwich Theorem 2: 0 <= Cbar - Cbar_tilde (PSD residual)
+    resid_eigs = np.linalg.eigvalsh(cbar - cbar_tilde)
+    assert resid_eigs.min() > -1e-3 * max(1.0, resid_eigs.max())
+
+
+def test_nystrom_error_monotone_in_features():
+    """§4.5 claim: Skyformer error decreases as the number of features grows."""
+    n, p = 128, 16
+    q, k = _qk(11, n, p, scale=0.4)
+    c = np.asarray(ref.gaussian_scores(q, k))
+    errs = []
+    for d in (8, 32, 128, 256):
+        tries = []
+        for s in range(3):
+            lmk = ref.uniform_landmarks(jax.random.PRNGKey(100 * d + s), 2 * n, d)
+            approx = np.asarray(ref.skyformer_scores(q, k, lmk, iters=12))
+            tries.append(np.linalg.norm(c - approx, 2))
+        errs.append(np.mean(tries))
+    assert errs[-1] < errs[0] * 0.5, f"no decay: {errs}"
+    assert all(errs[i + 1] <= errs[i] * 1.25 for i in range(len(errs) - 1)), errs
+
+
+def test_full_landmarks_recover_exact_matrix():
+    """With all 2n rows as landmarks the Nyström approximation is exact."""
+    n, p = 40, 8
+    q, k = _qk(5, n, p, scale=0.5)
+    c = np.asarray(ref.gaussian_scores(q, k))
+    lmk = jnp.arange(2 * n)
+    approx = np.asarray(ref.skyformer_scores(q, k, lmk, gamma=1e-6, iters=30))
+    np.testing.assert_allclose(approx, c, atol=5e-3)
+
+
+def test_kernelized_attention_equals_normalized_softmax_numerator():
+    """§4.1: C = D_Q^{-1/2} A D_K^{-1/2} with A = exp(QK^T/sqrt(p))."""
+    n, p = 50, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (n, p)) * 0.5
+    k = jax.random.normal(jax.random.split(key)[0], (n, p)) * 0.5
+    scale = p**-0.25
+    c = np.asarray(ref.gaussian_scores(q * scale, k * scale))
+    a = np.exp(np.asarray(q) @ np.asarray(k).T / np.sqrt(p))
+    dq = np.exp(np.sum(np.asarray(q) ** 2, -1) / np.sqrt(p))
+    dk = np.exp(np.sum(np.asarray(k) ** 2, -1) / np.sqrt(p))
+    want = dq[:, None] ** -0.5 * a * dk[None, :] ** -0.5
+    np.testing.assert_allclose(c, want, rtol=1e-4)

@@ -1,0 +1,84 @@
+//! L3 hot-path microbenchmarks (§Perf): where does coordinator time go?
+//!
+//! Decomposes one train step into: batch generation, tensor->literal
+//! upload, execute, download.  The §Perf target is coordinator overhead
+//! (everything but execute) < 5% of step time.
+
+use std::time::Duration;
+
+use skyformer::coordinator::trainer::{TrainConfig, Trainer};
+use skyformer::data::batch::{Dataset, Split};
+use skyformer::runtime::engine::Engine;
+use skyformer::runtime::tensor::Tensor;
+use skyformer::util::bench::bench;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("coordinator_hotpath: skipped ({e})");
+            return;
+        }
+    };
+    let Ok(spec) = engine
+        .manifest()
+        .find("listops", "skyformer", "train", false)
+        .cloned()
+    else {
+        eprintln!("coordinator_hotpath: listops_skyformer not built");
+        return;
+    };
+
+    // 1. batch generation
+    let ds = Dataset::for_task(&spec.task_config, 0).unwrap();
+    let mut i = 0u64;
+    let s = bench("data: batch generation", Duration::from_secs(2), || {
+        let b = ds.batch(Split::Train, i);
+        std::hint::black_box(b);
+        i += 1;
+    });
+    println!("{s}");
+
+    // 2. host->literal conversion for one full input set
+    let init = engine.load("listops", "skyformer", "init", false).unwrap();
+    let state = init.run(&[Tensor::scalar_u32(0)]).unwrap();
+    let batch = ds.batch(Split::Train, 0);
+    let s = bench("runtime: tensors -> literals", Duration::from_secs(2), || {
+        for t in &state {
+            std::hint::black_box(t.to_literal().unwrap());
+        }
+        std::hint::black_box(batch.tokens.to_literal().unwrap());
+    });
+    println!("{s}");
+
+    // 3. full step through the Trainer (execute dominates)
+    let cfg = TrainConfig::new("listops", "skyformer");
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    let _ = trainer.step(0);
+    let mut step = 1usize;
+    let s_all = bench("trainer: full step", Duration::from_secs(8), || {
+        trainer.step(step).unwrap();
+        step += 1;
+    });
+    println!("{s_all}");
+
+    // 4. exec-only accounting from the executable's internal stats
+    let exec = engine.load("listops", "skyformer", "train", false).unwrap();
+    let st = exec.stats.borrow();
+    if st.calls > 0 {
+        let exec_ms = st.exec_seconds / st.calls as f64 * 1e3;
+        let upload_ms = st.upload_seconds / st.calls as f64 * 1e3;
+        let download_ms = st.download_seconds / st.calls as f64 * 1e3;
+        let total = s_all.mean_ms();
+        println!(
+            "\nper-step decomposition: execute {exec_ms:.1}ms, upload {upload_ms:.1}ms, \
+             download {download_ms:.1}ms, other {:.1}ms",
+            (total - exec_ms - upload_ms - download_ms).max(0.0)
+        );
+        println!(
+            "coordinator overhead: {:.1}% of step (target < 5%)",
+            100.0 * (total - exec_ms) / total
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Figure 1 bench: relative spectral error vs number of features, for all
+//! approximation methods, across sequence lengths and weight regimes —
+//! plus the wall-time cost of each method at each budget.
+//!
+//! Prints the same series the paper plots (error should fall sharply with
+//! d for Skyformer and stay nearly flat for the others), for both
+//! "initialized" and "pretrained" Q/K/V regimes (DESIGN.md §5 probes).
+
+use skyformer::attention::{self, exact, probes};
+use skyformer::linalg::norms;
+use skyformer::report::tables::Table;
+use skyformer::util::bench::time_once;
+use skyformer::util::rng::Rng;
+
+fn main() {
+    let features = [16usize, 32, 64, 128, 256];
+    let lengths = [256usize, 512];
+    let trials = 3u64;
+    let p = 32;
+
+    for regime in [probes::Regime::Init, probes::Regime::Pretrained] {
+        for &n in &lengths {
+            let mut err_t = Table::new(
+                &format!(
+                    "Figure 1 (bench): rel spectral error, n={n}, {} weights",
+                    regime.name()
+                ),
+                &["method", "d=16", "d=32", "d=64", "d=128", "d=256"],
+            );
+            let mut time_t = Table::new(
+                &format!("Figure 1 (bench): approx wall ms, n={n}, {}", regime.name()),
+                &["method", "d=16", "d=32", "d=64", "d=128", "d=256"],
+            );
+            let mut rng = Rng::new(42).split_str(regime.name()).split(n as u64);
+            let pr = probes::probe(regime, n, p, &mut rng);
+            let target = exact::softmax_attention(&pr.q, &pr.k, &pr.v);
+
+            for method in attention::METHODS {
+                let mut err_cells = vec![method.name().to_string()];
+                let mut time_cells = vec![method.name().to_string()];
+                for &d in &features {
+                    let mut err_acc = 0.0f32;
+                    let mut ms_acc = 0.0f64;
+                    for trial in 0..trials {
+                        let mut trng = rng.split(d as u64 * 101 + trial);
+                        let (approx, dt) = time_once(|| {
+                            attention::approximate(method, &pr.q, &pr.k, &pr.v, d, &mut trng)
+                        });
+                        err_acc += norms::relative_spectral_error(&target, &approx);
+                        ms_acc += dt.as_secs_f64() * 1e3;
+                    }
+                    err_cells.push(format!("{:.4}", err_acc / trials as f32));
+                    time_cells.push(format!("{:.1}", ms_acc / trials as f64));
+                }
+                err_t.row(err_cells);
+                time_t.row(time_cells);
+            }
+            println!("{}", err_t.render());
+            println!("{}", time_t.render());
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Table 2 bench: per-train-step wall time and peak tensor memory for each
+//! (attention, task) artifact that has been built.
+//!
+//! Regenerates the paper's Table 2 *shape*: which attention is cheaper per
+//! step and how cost scales with sequence length (absolute hours are
+//! testbed-specific; DESIGN.md §5).  Run via `cargo bench --bench
+//! table2_time` (custom harness — criterion is unavailable offline).
+
+use std::time::Duration;
+
+use skyformer::coordinator::trainer::{TrainConfig, Trainer};
+use skyformer::report::tables::{fmt_bytes, Table};
+use skyformer::runtime::engine::Engine;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("table2_time: skipped ({e})");
+            return;
+        }
+    };
+    let configs = engine.manifest().trainable_configs();
+    if configs.is_empty() {
+        eprintln!("table2_time: no trainable artifacts built");
+        return;
+    }
+    let mut t = Table::new(
+        "Table 2 (bench): per-step time / peak tensor bytes",
+        &["task", "model", "mean ms/step", "p95 ms", "peak mem", "n"],
+    );
+    for (task, attn, pallas) in configs {
+        if pallas {
+            continue; // interpret-mode pallas timing is not a perf claim
+        }
+        let cfg = TrainConfig::new(&task, &attn);
+        let mut trainer = match Trainer::new(&engine, cfg) {
+            Ok(tr) => tr,
+            Err(e) => {
+                eprintln!("skip {task}/{attn}: {e}");
+                continue;
+            }
+        };
+        // warmup (compile + caches)
+        let mut step = 0usize;
+        let _ = trainer.step(step);
+        step += 1;
+        let stats = skyformer::util::bench::bench(
+            &format!("{task}/{attn}"),
+            Duration::from_secs(6),
+            || {
+                trainer.step(step).expect("train step");
+                step += 1;
+            },
+        );
+        println!("{stats}");
+        t.row(vec![
+            task.clone(),
+            attn.clone(),
+            format!("{:.1}", stats.mean_ms()),
+            format!("{:.1}", stats.p95.as_secs_f64() * 1e3),
+            fmt_bytes(trainer.metrics.peak_bytes),
+            stats.iters.to_string(),
+        ]);
+    }
+    println!("\n{}", t.render());
+}

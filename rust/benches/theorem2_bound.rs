@@ -1,0 +1,82 @@
+//! Theorem 2 empirics: measured Nyström error vs the lambda = eps||C||
+//! bound, and the statistical-dimension/landmark-count relationship.
+//!
+//! For a sweep of regularisation levels lambda, we compute the statistical
+//! dimension d_stat(lambda) of the lifted matrix C_bar, sample the
+//! theorem's sufficient landmark count, and verify the measured
+//! ||C - C_tilde|| stays below lambda — the paper's §4.3 guarantee.
+
+use skyformer::linalg::{norms, Matrix};
+use skyformer::nystrom::{self, theory, Inverse, Kernel};
+use skyformer::report::tables::Table;
+use skyformer::util::rng::Rng;
+
+fn main() {
+    let n = 128usize;
+    let p = 16usize;
+    let mut rng = Rng::new(7);
+    let scale = (p as f32).powf(-0.25) * 0.8;
+    let q = Matrix::randn(&mut rng, n, p, scale);
+    let k = Matrix::randn(&mut rng, n, p, scale);
+    let x = q.vcat(&k);
+    let c = nystrom::kernel_matrix(Kernel::Gaussian, &q, &k);
+    let cbar = nystrom::kernel_matrix(Kernel::Gaussian, &x, &x);
+    let norm_c = norms::spectral_norm(&c);
+    println!("n={n} p={p}  ||C||={norm_c:.4}\n");
+
+    let mut t = Table::new(
+        "Theorem 2 (bench): measured error vs lambda bound",
+        &[
+            "eps", "lambda", "d_stat", "beta", "d_suff", "d_used",
+            "measured ||C-C~||", "bound ok",
+        ],
+    );
+    for eps in [0.5f32, 0.25, 0.1, 0.05] {
+        let lambda = eps * norm_c;
+        let prof = theory::leverage_profile(&cbar, lambda);
+        let beta = theory::coherence_beta(&prof);
+        let d_suff = theory::sufficient_landmarks(&prof);
+        // theorem's d can exceed 2n for small eps; cap at 2n (exact regime)
+        let d_used = d_suff.min(2 * n);
+        let mut worst = 0.0f32;
+        for trial in 0..5u64 {
+            let mut trng = rng.split(trial + eps.to_bits() as u64);
+            let approx = nystrom::modified_nystrom(
+                Kernel::Gaussian,
+                &q,
+                &k,
+                d_used,
+                Inverse::Exact { gamma: lambda * 1e-3 },
+                &mut trng,
+            );
+            let err = norms::spectral_norm(&c.sub(&approx));
+            worst = worst.max(err);
+        }
+        t.row(vec![
+            format!("{eps}"),
+            format!("{lambda:.4}"),
+            format!("{:.1}", prof.d_stat),
+            format!("{beta:.3}"),
+            d_suff.to_string(),
+            d_used.to_string(),
+            format!("{worst:.4}"),
+            if worst <= lambda * 1.05 { "yes".into() } else { "VIOLATED".to_string() },
+        ]);
+    }
+    println!("{}", t.render());
+
+    // d_stat growth with 1/eps (the paper's complexity discussion)
+    let mut t2 = Table::new(
+        "Statistical dimension vs regularisation",
+        &["lambda", "d_stat", "d_stat / 2n"],
+    );
+    for lam in [1.0f32, 0.3, 0.1, 0.03, 0.01] {
+        let prof = theory::leverage_profile(&cbar, lam);
+        t2.row(vec![
+            format!("{lam}"),
+            format!("{:.1}", prof.d_stat),
+            format!("{:.3}", prof.d_stat / (2.0 * n as f32)),
+        ]);
+    }
+    println!("{}", t2.render());
+}

@@ -1,0 +1,486 @@
+//! The approximation methods of Figure 1, in native rust.
+//!
+//! Every method maps (q, k, v, num_features, rng) to an approximate
+//! *softmax-attention output* `~ D^{-1} A V`.  Untrained projections
+//! (Linformer) are random — matching the paper's Figure-1 protocol, where
+//! weights come from initialized/pretrained BERT but the approximator's own
+//! parameters are freshly sampled.
+
+use crate::attention::exact::{row_softmax, softmax_attention};
+use crate::linalg::Matrix;
+use crate::nystrom::{self, Inverse, Kernel};
+use crate::util::rng::Rng;
+
+/// The methods of the study (Figure 1's legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Modified Nyström on the un-normalised score matrix A (the paper's
+    /// "Skyformer" series in Figure 1: approximate A, then D, then D^{-1}AV).
+    Skyformer,
+    /// Nyströmformer: Nyström directly on the softmax matrix with
+    /// segment-mean landmarks (the non-PSD usage the paper critiques).
+    Nystromformer,
+    Linformer,
+    Performer,
+    Informer,
+    Reformer,
+    BigBird,
+}
+
+pub const METHODS: [Method; 7] = [
+    Method::Skyformer,
+    Method::Nystromformer,
+    Method::Linformer,
+    Method::Performer,
+    Method::Informer,
+    Method::Reformer,
+    Method::BigBird,
+];
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Skyformer => "skyformer",
+            Method::Nystromformer => "nystromformer",
+            Method::Linformer => "linformer",
+            Method::Performer => "performer",
+            Method::Informer => "informer",
+            Method::Reformer => "reformer",
+            Method::BigBird => "bigbird",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Method> {
+        METHODS.iter().copied().find(|m| m.name() == name)
+    }
+}
+
+/// Dispatch: approximate softmax attention output with `d` features.
+pub fn approximate(
+    method: Method,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    d: usize,
+    rng: &mut Rng,
+) -> Matrix {
+    match method {
+        Method::Skyformer => skyformer(q, k, v, d, rng),
+        Method::Nystromformer => nystromformer(q, k, v, d),
+        Method::Linformer => linformer(q, k, v, d, rng),
+        Method::Performer => performer(q, k, v, d, rng),
+        Method::Informer => informer(q, k, v, d, rng),
+        Method::Reformer => reformer(q, k, v, d, rng),
+        Method::BigBird => bigbird(q, k, v, d, rng),
+    }
+}
+
+/// Figure-1 "Skyformer": modified Nyström (SM kernel, PSD lift) on A;
+/// D is recovered from the approximation (A_tilde 1), as Performer does.
+fn skyformer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Matrix {
+    let landmarks = rng.choose_distinct(q.rows + k.rows, d.min(q.rows + k.rows));
+    let a_tilde = nystrom::modified_nystrom_with_landmarks(
+        Kernel::Softmax,
+        q,
+        k,
+        &landmarks,
+        Inverse::NewtonSchulz { gamma: 1e-3, iters: 10 },
+    );
+    normalize_rows_apply(&a_tilde, v)
+}
+
+/// The actual Skyformer model output `C_tilde V` (Gaussian kernel) —
+/// approximates Kernelized Attention, exposed for the KA-target study.
+pub fn skyformer_gaussian(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Matrix {
+    let landmarks = rng.choose_distinct(q.rows + k.rows, d.min(q.rows + k.rows));
+    nystrom::modified_nystrom_apply(
+        Kernel::Gaussian,
+        q,
+        k,
+        v,
+        &landmarks,
+        Inverse::NewtonSchulz { gamma: 1e-3, iters: 10 },
+    )
+}
+
+fn normalize_rows_apply(a: &Matrix, v: &Matrix) -> Matrix {
+    // D^{-1} A V with D = diag(A 1); guard against tiny/negative rows
+    let mut out = a.matmul(v);
+    for i in 0..a.rows {
+        let s: f32 = a.row(i).iter().sum();
+        let inv = 1.0 / s.abs().max(1e-6) * s.signum();
+        for x in out.row_mut(i) {
+            *x *= inv;
+        }
+    }
+    out
+}
+
+/// Nyströmformer (Xiong et al.): segment-mean landmarks, softmax blocks,
+/// iterative pinv on the (non-PSD) middle block.
+fn nystromformer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize) -> Matrix {
+    let lq = segment_means(q, d);
+    let lk = segment_means(k, d);
+    let f1 = row_softmax(&q.matmul(&lk.transpose())); // (n, d)
+    let a = row_softmax(&lq.matmul(&lk.transpose())); // (d, d)
+    let f3 = row_softmax(&lq.matmul(&k.transpose())); // (d, m)
+    let z = hyperpower_pinv(&a, 10);
+    f1.matmul(&z.matmul(&f3.matmul(v)))
+}
+
+fn segment_means(x: &Matrix, num: usize) -> Matrix {
+    let num = num.min(x.rows).max(1);
+    let base = x.rows / num;
+    let extra = x.rows % num;
+    let mut out = Matrix::zeros(num, x.cols);
+    let mut row = 0usize;
+    for s in 0..num {
+        let len = base + usize::from(s < extra);
+        let len = len.max(1);
+        for _ in 0..len {
+            if row >= x.rows {
+                break;
+            }
+            for j in 0..x.cols {
+                out[(s, j)] += x[(row, j)];
+            }
+            row += 1;
+        }
+        for j in 0..x.cols {
+            out[(s, j)] /= len as f32;
+        }
+    }
+    out
+}
+
+/// Nyströmformer's unpreconditioned hyperpower pinv (their released init).
+fn hyperpower_pinv(a: &Matrix, iters: usize) -> Matrix {
+    let n = a.rows;
+    let eye = Matrix::eye(n);
+    let norm1 = (0..n)
+        .map(|j| (0..n).map(|i| a[(i, j)].abs()).sum::<f32>())
+        .fold(0.0f32, f32::max);
+    let norminf = (0..n)
+        .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+        .fold(0.0f32, f32::max);
+    let mut z = a.transpose().scale(1.0 / (norm1 * norminf).max(1e-30));
+    for _ in 0..iters {
+        let az = a.matmul(&z);
+        let t1 = eye.scale(7.0).sub(&az);
+        let t2 = eye.scale(15.0).sub(&az.matmul(&t1));
+        let t3 = eye.scale(13.0).sub(&az.matmul(&t2));
+        z = z.matmul(&t3).scale(0.25);
+    }
+    z
+}
+
+/// Linformer: random JL projections E, F (d x m) compressing keys/values.
+fn linformer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Matrix {
+    let m = k.rows;
+    let scale = 1.0 / (m as f32).sqrt();
+    let e = Matrix::randn(rng, d.min(m), m, scale);
+    let f = Matrix::randn(rng, d.min(m), m, scale);
+    let ke = e.matmul(k); // (d, p)
+    let vf = f.matmul(v); // (d, dv)
+    row_softmax(&q.matmul(&ke.transpose())).matmul(&vf)
+}
+
+/// Performer / FAVOR+: positive orthogonal random features for SM.
+fn performer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Matrix {
+    let p = q.cols;
+    let w = orthogonal_features(rng, d, p);
+    let pq = favor_phi(q, &w);
+    let pk = favor_phi(k, &w);
+    // out = phi(q) (phi(k)^T v) / (phi(q) phi(k)^T 1)
+    let kv = pk.transpose().matmul(v); // (d, dv)
+    let num = pq.matmul(&kv); // (n, dv)
+    let ksum: Vec<f32> = (0..d).map(|j| (0..pk.rows).map(|i| pk[(i, j)]).sum()).collect();
+    let den = pq.matvec(&ksum); // (n,)
+    let mut out = num;
+    for i in 0..out.rows {
+        let inv = 1.0 / den[i].max(1e-6);
+        for x in out.row_mut(i) {
+            *x *= inv;
+        }
+    }
+    out
+}
+
+fn favor_phi(x: &Matrix, w: &Matrix) -> Matrix {
+    // phi(x) = exp(w.x - |x|^2/2) / sqrt(m), with a global max-subtraction
+    let proj = x.matmul(&w.transpose()); // (n, m)
+    let m = w.rows as f32;
+    let mut z = Matrix::zeros(proj.rows, proj.cols);
+    let mut zmax = f32::NEG_INFINITY;
+    for i in 0..proj.rows {
+        let sq: f32 = 0.5 * x.row(i).iter().map(|a| a * a).sum::<f32>();
+        for j in 0..proj.cols {
+            let e = proj[(i, j)] - sq;
+            z[(i, j)] = e;
+            zmax = zmax.max(e);
+        }
+    }
+    for val in &mut z.data {
+        *val = (*val - zmax).exp() / m.sqrt();
+    }
+    z
+}
+
+fn orthogonal_features(rng: &mut Rng, m: usize, p: usize) -> Matrix {
+    // QR of gaussian blocks via Gram-Schmidt, chi-resampled row norms
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(m);
+    while rows.len() < m {
+        let block = (rows.len() / p) * p; // start of this block
+        let in_block = rows.len() - block;
+        let mut v: Vec<f32> = (0..p).map(|_| rng.normal()).collect();
+        // orthogonalise against this block only
+        for prev in rows[block..block + in_block].iter() {
+            let dot: f32 = v.iter().zip(prev).map(|(a, b)| a * b).sum();
+            for (x, &pv) in v.iter_mut().zip(prev) {
+                *x -= dot * pv;
+            }
+        }
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm < 1e-6 {
+            continue; // resample degenerate draw
+        }
+        for x in &mut v {
+            *x /= norm;
+        }
+        rows.push(v);
+    }
+    // chi(p) row norms restore the gaussian marginals
+    let mut w = Matrix::from_rows(rows);
+    for i in 0..m {
+        let chi: f32 = (0..p).map(|_| rng.normal().powi(2)).sum::<f32>().sqrt();
+        for x in w.row_mut(i) {
+            *x *= chi;
+        }
+    }
+    w
+}
+
+/// Informer ProbSparse: top-u queries (by max-mean sparsity measure on a
+/// key sample) get full attention; the rest emit mean(V).
+fn informer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Matrix {
+    let n = q.rows;
+    let m = k.rows;
+    let u = d.min(n);
+    let su = d.min(m);
+    let sample_idx = rng.choose_distinct(m, su);
+    let ks = k.take_rows(&sample_idx);
+    let meas = q.matmul(&ks.transpose()); // (n, su)
+    let mut sparsity: Vec<(f32, usize)> = (0..n)
+        .map(|i| {
+            let row = meas.row(i);
+            let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mean: f32 = row.iter().sum::<f32>() / su as f32;
+            (max - mean, i)
+        })
+        .collect();
+    sparsity.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let top: Vec<usize> = sparsity[..u].iter().map(|&(_, i)| i).collect();
+
+    // baseline: mean of V
+    let mut out = Matrix::zeros(n, v.cols);
+    let mut mean_v = vec![0.0f32; v.cols];
+    for i in 0..m {
+        for j in 0..v.cols {
+            mean_v[j] += v[(i, j)];
+        }
+    }
+    for x in &mut mean_v {
+        *x /= m as f32;
+    }
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&mean_v);
+    }
+    // full attention for the selected queries
+    let qt = q.take_rows(&top);
+    let attn = softmax_attention(&qt, k, v);
+    for (r, &i) in top.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(attn.row(r));
+    }
+    out
+}
+
+/// Reformer-style LSH: random-rotation buckets on (q + k), sort, chunked
+/// attention over own + previous chunk (chunk = d/2 keys visible per query).
+fn reformer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Matrix {
+    let n = q.rows;
+    assert_eq!(k.rows, n, "reformer assumes aligned q/k positions");
+    let chunk = (d / 2).clamp(1, n);
+    let n_buckets = (n / chunk).max(2);
+    let p = q.cols;
+    let r = Matrix::randn(rng, p, n_buckets, 1.0);
+    // bucket by argmax over [xR, -xR]
+    let joint = Matrix::from_fn(n, p, |i, j| q[(i, j)] + k[(i, j)]);
+    let logits = joint.matmul(&r);
+    let mut order: Vec<usize> = (0..n).collect();
+    let bucket_of = |i: usize| -> usize {
+        let row = logits.row(i);
+        let mut best = (f32::NEG_INFINITY, 0usize);
+        for (b, &x) in row.iter().enumerate() {
+            if x > best.0 {
+                best = (x, b);
+            }
+            if -x > best.0 {
+                best = (-x, b + n_buckets);
+            }
+        }
+        best.1
+    };
+    let buckets: Vec<usize> = (0..n).map(bucket_of).collect();
+    order.sort_by_key(|&i| (buckets[i], i));
+
+    let mut out = Matrix::zeros(n, v.cols);
+    let n_chunks = n.div_ceil(chunk);
+    for c in 0..n_chunks {
+        let qs: Vec<usize> = (c * chunk..((c + 1) * chunk).min(n))
+            .map(|r| order[r])
+            .collect();
+        // keys: previous chunk (wrap) + own chunk
+        let prev = if c == 0 { n_chunks - 1 } else { c - 1 };
+        let mut kidx: Vec<usize> = (prev * chunk..((prev + 1) * chunk).min(n))
+            .map(|r| order[r])
+            .collect();
+        kidx.extend(qs.iter().copied());
+        let qm = q.take_rows(&qs);
+        let km = k.take_rows(&kidx);
+        let vm = v.take_rows(&kidx);
+        let o = softmax_attention(&qm, &km, &vm);
+        for (r, &i) in qs.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(o.row(r));
+        }
+    }
+    out
+}
+
+/// BigBird-style block sparse: global block 0, window {i-1, i, i+1}, and
+/// random blocks; block size chosen so each query sees ~d keys.
+fn bigbird(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Matrix {
+    let n = q.rows;
+    assert_eq!(k.rows, n, "bigbird assumes aligned q/k positions");
+    let b = (d / 6).clamp(1, n); // 6 blocks visible => ~d keys
+    let nb = n.div_ceil(b);
+    let mut out = Matrix::zeros(n, v.cols);
+    for blk in 0..nb {
+        let qs: Vec<usize> = (blk * b..((blk + 1) * b).min(n)).collect();
+        let mut sel = vec![0usize, blk.saturating_sub(1), blk, (blk + 1) % nb];
+        sel.push(rng.below(nb));
+        sel.push(rng.below(nb));
+        sel.sort_unstable();
+        sel.dedup();
+        let mut kidx = Vec::new();
+        for &s in &sel {
+            kidx.extend(s * b..((s + 1) * b).min(n));
+        }
+        let qm = q.take_rows(&qs);
+        let km = k.take_rows(&kidx);
+        let vm = v.take_rows(&kidx);
+        let o = softmax_attention(&qm, &km, &vm);
+        for (r, &i) in qs.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(o.row(r));
+        }
+    }
+    // global block queries see everything
+    let g: Vec<usize> = (0..b.min(n)).collect();
+    let qg = q.take_rows(&g);
+    let og = softmax_attention(&qg, k, v);
+    for (r, &i) in g.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(og.row(r));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact;
+    use crate::linalg::norms::relative_spectral_error;
+
+    fn qkv(seed: u64, n: usize, p: usize) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let scale = (p as f32).powf(-0.25) * 0.8;
+        let q = Matrix::randn(&mut rng, n, p, scale);
+        let k = Matrix::randn(&mut rng, n, p, scale);
+        let v = Matrix::randn(&mut rng, n, p, 1.0);
+        (q, k, v)
+    }
+
+    #[test]
+    fn all_methods_produce_finite_right_shape() {
+        let (q, k, v) = qkv(0, 64, 16);
+        for m in METHODS {
+            let mut rng = Rng::new(1);
+            let out = approximate(m, &q, &k, &v, 16, &mut rng);
+            assert_eq!((out.rows, out.cols), (64, 16), "{}", m.name());
+            assert!(out.is_finite(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn skyformer_error_decreases_with_features() {
+        let (q, k, v) = qkv(2, 96, 16);
+        let target = exact::softmax_attention(&q, &k, &v);
+        let err = |d: usize| -> f32 {
+            let mut acc = 0.0;
+            for s in 0..3 {
+                let mut rng = Rng::new(50 + s);
+                let approx = approximate(Method::Skyformer, &q, &k, &v, d, &mut rng);
+                acc += relative_spectral_error(&target, &approx);
+            }
+            acc / 3.0
+        };
+        let (e_small, e_large) = (err(8), err(128));
+        assert!(
+            e_large < e_small * 0.7,
+            "skyformer error flat: {e_small} -> {e_large}"
+        );
+    }
+
+    #[test]
+    fn performer_is_unbiasedish_at_high_features() {
+        let (q, k, v) = qkv(3, 48, 8);
+        let target = exact::softmax_attention(&q, &k, &v);
+        let mut rng = Rng::new(9);
+        let approx = approximate(Method::Performer, &q, &k, &v, 512, &mut rng);
+        let rel = relative_spectral_error(&target, &approx);
+        assert!(rel < 0.5, "performer rel err {rel}");
+    }
+
+    #[test]
+    fn informer_covers_all_queries_at_full_budget() {
+        let (q, k, v) = qkv(4, 32, 8);
+        let target = exact::softmax_attention(&q, &k, &v);
+        let mut rng = Rng::new(5);
+        let approx = approximate(Method::Informer, &q, &k, &v, 32, &mut rng);
+        let rel = relative_spectral_error(&target, &approx);
+        assert!(rel < 1e-3, "at u=n informer must equal exact, rel {rel}");
+    }
+
+    #[test]
+    fn skyformer_gaussian_approximates_kernelized() {
+        let (q, k, v) = qkv(6, 80, 16);
+        let target = exact::kernelized_attention(&q, &k, &v);
+        let mut rng = Rng::new(7);
+        let approx = skyformer_gaussian(&q, &k, &v, 160, &mut rng);
+        let rel = relative_spectral_error(&target, &approx);
+        assert!(rel < 0.35, "rel {rel}");
+    }
+
+    #[test]
+    fn segment_means_preserve_global_mean() {
+        let (q, _, _) = qkv(8, 37, 8);
+        let sm = segment_means(&q, 5);
+        assert_eq!(sm.rows, 5);
+        // weighted mean of segment means == global mean (weights = seg sizes)
+        let global: f32 = (0..q.rows).map(|i| q.row(i).iter().sum::<f32>()).sum::<f32>() / q.rows as f32;
+        let sizes = [8.0f32, 8.0, 7.0, 7.0, 7.0];
+        let weighted: f32 = (0..5)
+            .map(|s| sm.row(s).iter().sum::<f32>() * sizes[s])
+            .sum::<f32>()
+            / 37.0;
+        assert!((global - weighted).abs() < 1e-3);
+    }
+}

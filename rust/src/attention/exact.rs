@@ -1,0 +1,82 @@
+//! Exact (quadratic) attention outputs: the targets of the Figure-1 study.
+
+use crate::linalg::Matrix;
+use crate::nystrom::{kernel_matrix, Kernel};
+
+/// Row-stochastic softmax of a score matrix (stable).
+pub fn row_softmax(s: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(s.rows, s.cols);
+    for i in 0..s.rows {
+        let row = s.row(i);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        let orow = out.row_mut(i);
+        for (o, &x) in orow.iter_mut().zip(row) {
+            *o = (x - max).exp();
+            sum += *o;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for o in orow {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Vanilla self-attention `softmax(q k^T) v` on pre-scaled q/k.
+pub fn softmax_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    let s = q.matmul(&k.transpose());
+    row_softmax(&s).matmul(v)
+}
+
+/// Kernelized Attention (paper Eq. 3): `kappa(q, k) v`, no normalisation.
+pub fn kernelized_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    kernel_matrix(Kernel::Gaussian, q, k).matmul(v)
+}
+
+/// The un-normalised softmax score matrix `A = exp(q k^T)` (pre-scaled).
+pub fn unnormalized_scores(q: &Matrix, k: &Matrix) -> Matrix {
+    kernel_matrix(Kernel::Softmax, q, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(0);
+        let q = Matrix::randn(&mut rng, 12, 8, 0.5);
+        let k = Matrix::randn(&mut rng, 10, 8, 0.5);
+        let w = row_softmax(&q.matmul(&k.transpose()));
+        for i in 0..12 {
+            let s: f32 = w.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_attention_of_constant_v() {
+        let mut rng = Rng::new(1);
+        let q = Matrix::randn(&mut rng, 9, 8, 0.5);
+        let k = Matrix::randn(&mut rng, 7, 8, 0.5);
+        let v = Matrix::from_fn(7, 3, |_, j| j as f32);
+        let out = softmax_attention(&q, &k, &v);
+        for i in 0..9 {
+            for j in 0..3 {
+                assert!((out[(i, j)] - j as f32).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn kernelized_single_token_identity() {
+        let q = Matrix::from_rows(vec![vec![0.3f32; 8]]);
+        let v = Matrix::from_rows(vec![(0..5).map(|x| x as f32).collect()]);
+        let out = kernelized_attention(&q, &q, &v);
+        for j in 0..5 {
+            assert!((out[(0, j)] - j as f32).abs() < 1e-5);
+        }
+    }
+}

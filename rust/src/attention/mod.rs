@@ -1,0 +1,18 @@
+//! Native-rust reference implementations of all nine attention mechanisms
+//! (Table 1's model column) on the dense substrate.
+//!
+//! These power the Figure-1 matrix-approximation study exactly as the paper
+//! runs it: every method approximates the output of vanilla softmax
+//! self-attention `D^{-1} A V` on the same (Q, K, V), and the error is the
+//! spectral norm of the output difference.  They also serve as
+//! cross-checks of the HLO-side numerics.
+//!
+//! Convention: all functions take **pre-scaled** q, k (multiplied by
+//! p^{-1/4}; see `python/compile/kernels/ref.py` for why this folds both
+//! the softmax 1/sqrt(p) and the Gaussian bandwidth).
+
+pub mod approximators;
+pub mod exact;
+pub mod probes;
+
+pub use approximators::{approximate, Method, METHODS};

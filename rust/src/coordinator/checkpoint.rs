@@ -1,0 +1,181 @@
+//! Checkpoints: the flattened train state (params + optimizer leaves) with
+//! their manifest names, in a self-describing binary format.
+//!
+//! Layout: `SKYCKPT1` magic, u64 header length, JSON header
+//! (`{"tensors": [{name, shape, dtype, offset_bytes}, ...]}`), then raw
+//! little-endian tensor data.  No serde/npz in the offline environment —
+//! this *is* the checkpoint substrate.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+const MAGIC: &[u8; 8] = b"SKYCKPT1";
+
+/// Save `state` (aligned with `specs`) to `path`.
+pub fn save(path: &Path, specs: &[TensorSpec], state: &[Tensor]) -> Result<()> {
+    if specs.len() != state.len() {
+        return Err(Error::Other(format!(
+            "checkpoint: {} specs vs {} tensors",
+            specs.len(),
+            state.len()
+        )));
+    }
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    for (spec, t) in specs.iter().zip(state) {
+        entries.push(json::obj(vec![
+            ("name", json::s(spec.name.clone())),
+            (
+                "shape",
+                Value::Array(t.shape().iter().map(|&d| json::num(d as f64)).collect()),
+            ),
+            ("dtype", json::s(t.dtype().name())),
+            ("offset", json::num(offset as f64)),
+        ]));
+        offset += t.size_bytes();
+    }
+    let header = json::to_string(&json::obj(vec![("tensors", Value::Array(entries))]));
+
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in state {
+        let bytes: &[u8] = match t {
+            Tensor::F32 { data, .. } => cast_slice(data),
+            Tensor::I32 { data, .. } => cast_slice(data),
+            Tensor::U32 { data, .. } => cast_slice(data),
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint; returns (names, tensors) in file order.
+pub fn load(path: &Path) -> Result<(Vec<String>, Vec<Tensor>)> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Other(format!("{}: not a checkpoint", path.display())));
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = json::parse(std::str::from_utf8(&hbuf).map_err(|_| {
+        Error::Other("checkpoint header not utf-8".into())
+    })?)?;
+    let mut rest = Vec::new();
+    f.read_to_end(&mut rest)?;
+
+    let mut names = Vec::new();
+    let mut tensors = Vec::new();
+    for e in header
+        .expect("tensors")?
+        .as_array()
+        .ok_or_else(|| Error::Other("tensors not an array".into()))?
+    {
+        let name = e.expect("name")?.as_str().unwrap_or_default().to_string();
+        let shape: Vec<usize> = e
+            .expect("shape")?
+            .as_array()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect();
+        let dtype = DType::parse(e.expect("dtype")?.as_str().unwrap_or(""))?;
+        let offset = e.expect("offset")?.as_usize().unwrap_or(0);
+        let n: usize = shape.iter().product();
+        let bytes = rest
+            .get(offset..offset + n * 4)
+            .ok_or_else(|| Error::Other("checkpoint truncated".into()))?;
+        let t = match dtype {
+            DType::F32 => Tensor::F32 { shape, data: from_le_f32(bytes) },
+            DType::I32 => Tensor::I32 { shape, data: from_le_i32(bytes) },
+            DType::U32 => Tensor::U32 { shape, data: from_le_u32(bytes) },
+        };
+        names.push(name);
+        tensors.push(t);
+    }
+    Ok((names, tensors))
+}
+
+fn cast_slice<T>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+fn from_le_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn from_le_i32(b: &[u8]) -> Vec<i32> {
+    b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn from_le_u32(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: Vec<usize>, dtype: DType) -> TensorSpec {
+        TensorSpec { name: name.into(), shape, dtype }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("skyformer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let specs = vec![
+            spec("params/w", vec![2, 3], DType::F32),
+            spec("opt/t", vec![], DType::F32),
+            spec("counts", vec![2], DType::I32),
+        ];
+        let state = vec![
+            Tensor::from_f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, 7.0]),
+            Tensor::scalar_f32(42.0),
+            Tensor::from_i32(vec![2], vec![-5, 9]),
+        ];
+        save(&path, &specs, &state).unwrap();
+        let (names, loaded) = load(&path).unwrap();
+        assert_eq!(names, vec!["params/w", "opt/t", "counts"]);
+        assert_eq!(loaded, state);
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = std::env::temp_dir().join("skyformer_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn mismatched_lengths_error() {
+        let dir = std::env::temp_dir().join("skyformer_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        let specs = vec![spec("a", vec![1], DType::F32)];
+        let err = save(&path, &specs, &[]);
+        assert!(err.is_err());
+    }
+}

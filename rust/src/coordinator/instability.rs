@@ -1,0 +1,99 @@
+//! Table-3 instability probe (paper Appendix F).
+//!
+//! For each model, run 20 update steps; at step i compute
+//!
+//!   tau_i = ||f(x_i, W_i) - f(x_i, W_{i-1})||_F^2 / ||W_i - W_{i-1}||_F^2
+//!
+//! where f is the two-layer encoder embedding (the `embed` artifact).
+//! Table 3 reports the mean over steps of each model's tau_i divided by
+//! self-attention's tau_i; ratios < 1 mean higher stability.
+
+use std::rc::Rc;
+
+use crate::coordinator::trainer::{TrainConfig, Trainer};
+use crate::data::batch::Split;
+use crate::runtime::engine::{Engine, Executable};
+use crate::runtime::tensor::Tensor;
+use crate::util::error::Result;
+
+pub struct InstabilityProbe {
+    trainer: Trainer,
+    exec_embed: Rc<Executable>,
+}
+
+#[derive(Debug, Clone)]
+pub struct InstabilityResult {
+    pub taus: Vec<f32>,
+}
+
+impl InstabilityResult {
+    pub fn mean_tau(&self) -> f32 {
+        self.taus.iter().sum::<f32>() / self.taus.len().max(1) as f32
+    }
+}
+
+impl InstabilityProbe {
+    pub fn new(engine: &Engine, mut cfg: TrainConfig) -> Result<InstabilityProbe> {
+        cfg.steps = 20;
+        let exec_embed = engine.load(&cfg.task, &cfg.attention, "embed", cfg.pallas)?;
+        let trainer = Trainer::new(engine, cfg)?;
+        Ok(InstabilityProbe { trainer, exec_embed })
+    }
+
+    fn embed(&self, params: &[Tensor], tokens: &Tensor, seed: u32) -> Result<Tensor> {
+        let n_p = self.exec_embed.spec.num_params;
+        let mut inputs = Vec::with_capacity(n_p + 2);
+        inputs.extend(params[..n_p].iter().cloned());
+        inputs.push(tokens.clone());
+        inputs.push(Tensor::scalar_u32(seed));
+        let mut out = self.exec_embed.run(&inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Run `steps` updates; returns tau_i per step.
+    pub fn run(&mut self, steps: usize, lr: f32) -> Result<InstabilityResult> {
+        let n_p = self.exec_embed.spec.num_params;
+        let mut taus = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let batch = self.trainer.dataset_batch(Split::Train, i as u64);
+            let w_prev: Vec<Tensor> = self.trainer.state()[..n_p].to_vec();
+            // fixed per-step seed so f() sees identical attention randomness
+            // for W_{i-1} and W_i (tau isolates the parameter perturbation)
+            let seed = 7_000 + i as u32;
+            let f_prev = self.embed(&w_prev, &batch.tokens, seed)?;
+            self.trainer.step_on(&batch, i, lr)?;
+            let w_cur: Vec<Tensor> = self.trainer.state()[..n_p].to_vec();
+            let f_cur = self.embed(&w_cur, &batch.tokens, seed)?;
+
+            let df = sq_frobenius_diff(&[f_cur], &[f_prev])?;
+            let dw = sq_frobenius_diff(&w_cur, &w_prev)?;
+            taus.push(df / dw.max(1e-30));
+        }
+        Ok(InstabilityResult { taus })
+    }
+}
+
+fn sq_frobenius_diff(a: &[Tensor], b: &[Tensor]) -> Result<f32> {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let xd = x.as_f32()?;
+        let yd = y.as_f32()?;
+        for (p, q) in xd.iter().zip(yd) {
+            let d = (p - q) as f64;
+            acc += d * d;
+        }
+    }
+    Ok(acc as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_frobenius_known() {
+        let a = vec![Tensor::from_f32(vec![2], vec![1.0, 2.0])];
+        let b = vec![Tensor::from_f32(vec![2], vec![0.0, 0.0])];
+        assert!((sq_frobenius_diff(&a, &b).unwrap() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,169 @@
+//! Training metrics: per-step records, eval series, wall-clock, and the
+//! peak-resident-tensor-bytes proxy Table 2's "Memory (GB)" column maps to
+//! on this testbed (DESIGN.md §5).
+
+use std::time::Instant;
+
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub wall_seconds: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    /// wall-clock seconds since training start (Figure 2/3 x-axis)
+    pub at_seconds: f64,
+}
+
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub peak_bytes: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            steps: Vec::new(),
+            evals: Vec::new(),
+            peak_bytes: 0,
+        }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn record_step(&mut self, step: usize, loss: f32, acc: f32, wall_seconds: f64) {
+        self.steps.push(StepRecord { step, loss, acc, wall_seconds });
+    }
+
+    pub fn record_eval(&mut self, step: usize, loss: f32, acc: f32) {
+        self.evals.push(EvalRecord { step, loss, acc, at_seconds: self.elapsed() });
+    }
+
+    pub fn observe_bytes(&mut self, bytes: usize) {
+        self.peak_bytes = self.peak_bytes.max(bytes);
+    }
+
+    pub fn best_eval_acc(&self) -> Option<f32> {
+        self.evals.iter().map(|e| e.acc).fold(None, |m, a| {
+            Some(match m {
+                None => a,
+                Some(b) => b.max(a),
+            })
+        })
+    }
+
+    pub fn final_train_loss(&self) -> Option<f32> {
+        self.steps.last().map(|s| s.loss)
+    }
+
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        // skip the first (compile-warm) step
+        let tail: Vec<f64> = self.steps.iter().skip(1).map(|s| s.wall_seconds).collect();
+        if tail.is_empty() {
+            self.steps[0].wall_seconds
+        } else {
+            tail.iter().sum::<f64>() / tail.len() as f64
+        }
+    }
+
+    /// Serialise to JSON for EXPERIMENTS.md appendices / curve plotting.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            (
+                "steps",
+                Value::Array(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("step", json::num(s.step as f64)),
+                                ("loss", json::num(s.loss as f64)),
+                                ("acc", json::num(s.acc as f64)),
+                                ("wall_seconds", json::num(s.wall_seconds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Value::Array(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            json::obj(vec![
+                                ("step", json::num(e.step as f64)),
+                                ("loss", json::num(e.loss as f64)),
+                                ("acc", json::num(e.acc as f64)),
+                                ("at_seconds", json::num(e.at_seconds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("peak_bytes", json::num(self.peak_bytes as f64)),
+            ("mean_step_seconds", json::num(self.mean_step_seconds())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_eval_and_means() {
+        let mut m = Metrics::new();
+        m.record_step(0, 2.0, 0.1, 1.0);
+        m.record_step(1, 1.5, 0.2, 0.5);
+        m.record_step(2, 1.2, 0.3, 0.7);
+        m.record_eval(1, 1.4, 0.25);
+        m.record_eval(2, 1.1, 0.22);
+        assert_eq!(m.best_eval_acc(), Some(0.25));
+        assert!((m.mean_step_seconds() - 0.6).abs() < 1e-9);
+        assert_eq!(m.final_train_loss(), Some(1.2));
+    }
+
+    #[test]
+    fn peak_bytes_monotone() {
+        let mut m = Metrics::new();
+        m.observe_bytes(100);
+        m.observe_bytes(50);
+        m.observe_bytes(300);
+        assert_eq!(m.peak_bytes, 300);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = Metrics::new();
+        m.record_step(0, 2.0, 0.1, 1.0);
+        m.record_eval(0, 1.9, 0.15);
+        let v = m.to_json();
+        let text = crate::util::json::to_string(&v);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("steps").unwrap().as_array().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Training/eval orchestration over the AOT artifacts (Layer 3 proper).
+pub mod checkpoint;
+pub mod instability;
+pub mod metrics;
+pub mod scheduler;
+pub mod trainer;
+
+pub use trainer::{TrainConfig, Trainer};

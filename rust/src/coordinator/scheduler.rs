@@ -1,0 +1,70 @@
+//! Learning-rate schedules. The LR is a runtime input of the train-step
+//! artifact, so the schedule lives entirely in the coordinator (L3) and
+//! new schedules need no re-lowering.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// Linear warmup then constant (the LRA recipe).
+    Warmup { base: f32, warmup_steps: usize },
+    /// Linear warmup then cosine decay to `floor`.
+    WarmupCosine { base: f32, warmup_steps: usize, total_steps: usize, floor: f32 },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::Warmup { base, warmup_steps } => {
+                if warmup_steps == 0 || step >= warmup_steps {
+                    base
+                } else {
+                    base * (step + 1) as f32 / warmup_steps as f32
+                }
+            }
+            Schedule::WarmupCosine { base, warmup_steps, total_steps, floor } => {
+                if step < warmup_steps {
+                    return base * (step + 1) as f32 / warmup_steps.max(1) as f32;
+                }
+                let t = (step - warmup_steps) as f32
+                    / (total_steps.saturating_sub(warmup_steps)).max(1) as f32;
+                let t = t.clamp(0.0, 1.0);
+                floor + 0.5 * (base - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 1e-4 };
+        assert_eq!(s.lr(0), 1e-4);
+        assert_eq!(s.lr(10_000), 1e-4);
+    }
+
+    #[test]
+    fn warmup_ramps_then_holds() {
+        let s = Schedule::Warmup { base: 1.0, warmup_steps: 10 };
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.lr(10), 1.0);
+        assert_eq!(s.lr(99), 1.0);
+    }
+
+    #[test]
+    fn cosine_decays_monotonically_to_floor() {
+        let s = Schedule::WarmupCosine { base: 1.0, warmup_steps: 5, total_steps: 105, floor: 0.1 };
+        let mut prev = s.lr(5);
+        for step in 6..105 {
+            let cur = s.lr(step);
+            assert!(cur <= prev + 1e-6, "rose at {step}");
+            prev = cur;
+        }
+        assert!((s.lr(104) - 0.1).abs() < 0.02);
+        assert!((s.lr(1_000) - 0.1).abs() < 1e-6);
+    }
+}

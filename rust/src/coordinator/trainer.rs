@@ -1,0 +1,258 @@
+//! The training loop: the Layer-3 orchestration proper.
+//!
+//! Owns the train state (flattened params + optimizer leaves as host
+//! tensors), generates deterministic batches, schedules the LR, invokes
+//! the train/eval HLO executables, tracks metrics, and keeps the best
+//! checkpoint — the paper's §5 protocol ("the best checkpoint with the
+//! highest accuracy on the development set will be saved for evaluation").
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::Schedule;
+use crate::data::batch::{Batch, Dataset, Split};
+use crate::runtime::engine::{Engine, Executable};
+use crate::runtime::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub task: String,
+    pub attention: String,
+    pub pallas: bool,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub log_every: usize,
+    /// save the best checkpoint here if set
+    pub checkpoint_path: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn new(task: &str, attention: &str) -> TrainConfig {
+        // paper §5: lr 1e-4 (2e-4 for retrieval/pathfinder)
+        let base_lr = match task {
+            "retrieval" | "pathfinder" => 2e-4,
+            _ => 1e-4,
+        };
+        TrainConfig {
+            task: task.to_string(),
+            attention: attention.to_string(),
+            pallas: false,
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 8,
+            schedule: Schedule::Warmup { base: base_lr, warmup_steps: 20 },
+            seed: 0,
+            log_every: 20,
+            checkpoint_path: None,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TrainResult {
+    pub metrics: Metrics,
+    pub best_eval_acc: f32,
+    pub final_eval_acc: f32,
+    pub final_eval_loss: f32,
+    pub test_acc: f32,
+    pub total_seconds: f64,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    exec_train: Rc<Executable>,
+    exec_eval: Rc<Executable>,
+    dataset: Dataset,
+    /// flattened params + optimizer leaves, in manifest order
+    pub state: Vec<Tensor>,
+    best_state: Option<Vec<Tensor>>,
+    pub metrics: Metrics,
+}
+
+impl Trainer {
+    pub fn new(engine: &Engine, cfg: TrainConfig) -> Result<Trainer> {
+        let exec_init = engine.load(&cfg.task, &cfg.attention, "init", cfg.pallas)?;
+        let exec_train = engine.load(&cfg.task, &cfg.attention, "train", cfg.pallas)?;
+        let exec_eval = engine.load(&cfg.task, &cfg.attention, "eval", cfg.pallas)?;
+        let task = exec_train.spec.task_config.clone();
+        let dataset = Dataset::for_task(&task, cfg.seed)?;
+        // initialise params + optimizer in-graph, per-seed
+        let state = exec_init.run(&[Tensor::scalar_u32(cfg.seed as u32)])?;
+        let mut metrics = Metrics::new();
+        let state_bytes: usize = state.iter().map(|t| t.size_bytes()).sum();
+        metrics.observe_bytes(state_bytes + exec_train.spec.input_bytes());
+        Ok(Trainer {
+            cfg,
+            exec_train,
+            exec_eval,
+            dataset,
+            state,
+            best_state: None,
+            metrics,
+        })
+    }
+
+    fn num_state(&self) -> usize {
+        self.exec_train.spec.num_state()
+    }
+
+    /// One optimizer step on the `step`-th deterministic train batch.
+    pub fn step(&mut self, step: usize) -> Result<(f32, f32)> {
+        let batch = self.dataset.batch(Split::Train, step as u64);
+        let lr = self.cfg.schedule.lr(step);
+        let t0 = Instant::now();
+        let (loss, acc) = self.step_on(&batch, step, lr)?;
+        self.metrics
+            .record_step(step, loss, acc, t0.elapsed().as_secs_f64());
+        Ok((loss, acc))
+    }
+
+    /// One step on a caller-supplied batch (instability probe uses this).
+    pub fn step_on(&mut self, batch: &Batch, step: usize, lr: f32) -> Result<(f32, f32)> {
+        let mut inputs = Vec::with_capacity(self.num_state() + 4);
+        inputs.extend(self.state.iter().cloned());
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.labels.clone());
+        inputs.push(Tensor::scalar_u32(self.step_seed(step)));
+        inputs.push(Tensor::F32 { shape: vec![], data: vec![lr] });
+        let mut out = self.exec_train.run(&inputs)?;
+        if out.len() != self.num_state() + 2 {
+            return Err(Error::Artifact {
+                name: self.exec_train.spec.name.clone(),
+                message: format!("train returned {} outputs", out.len()),
+            });
+        }
+        let acc = out.pop().unwrap().scalar_value_f32()?;
+        let loss = out.pop().unwrap().scalar_value_f32()?;
+        self.state = out;
+        if !loss.is_finite() {
+            return Err(Error::Other(format!(
+                "{}/{}: non-finite loss at step {step}",
+                self.cfg.task, self.cfg.attention
+            )));
+        }
+        Ok((loss, acc))
+    }
+
+    fn step_seed(&self, step: usize) -> u32 {
+        // decorrelate attention randomness across steps and runs
+        (self.cfg.seed as u32)
+            .wrapping_mul(0x9E37_79B9)
+            .wrapping_add(step as u32)
+    }
+
+    /// Mean (loss, acc) over `n` deterministic batches of a split.
+    pub fn evaluate(&self, split: Split, n: usize) -> Result<(f32, f32)> {
+        self.evaluate_state(self.state(), split, n)
+    }
+
+    fn evaluate_state(&self, state: &[Tensor], split: Split, n: usize) -> Result<(f32, f32)> {
+        let n_p = self.exec_train.spec.num_params;
+        let mut loss_sum = 0.0f32;
+        let mut acc_sum = 0.0f32;
+        for i in 0..n {
+            let batch = self.dataset.batch(split, i as u64);
+            let mut inputs = Vec::with_capacity(n_p + 3);
+            inputs.extend(state[..n_p].iter().cloned());
+            inputs.push(batch.tokens);
+            inputs.push(batch.labels);
+            inputs.push(Tensor::scalar_u32(1_000_000 + i as u32));
+            let out = self.exec_eval.run(&inputs)?;
+            loss_sum += out[0].scalar_value_f32()?;
+            acc_sum += out[1].scalar_value_f32()?;
+        }
+        Ok((loss_sum / n as f32, acc_sum / n as f32))
+    }
+
+    pub fn state(&self) -> &[Tensor] {
+        &self.state
+    }
+
+    /// Deterministic batch access for external probes (instability, SVD).
+    pub fn dataset_batch(&self, split: Split, index: u64) -> Batch {
+        self.dataset.batch(split, index)
+    }
+
+    /// Full training run per the paper's protocol.
+    pub fn train(&mut self) -> Result<TrainResult> {
+        let start = Instant::now();
+        let mut best_acc = f32::NEG_INFINITY;
+        for step in 0..self.cfg.steps {
+            let (loss, acc) = self.step(step)?;
+            if self.cfg.verbose && step % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[{}/{}] step {step:>5} loss {loss:.4} acc {acc:.3} lr {:.2e}",
+                    self.cfg.task,
+                    self.cfg.attention,
+                    self.cfg.schedule.lr(step)
+                );
+            }
+            let is_last = step + 1 == self.cfg.steps;
+            if (step + 1) % self.cfg.eval_every == 0 || is_last {
+                let (el, ea) = self.evaluate(Split::Valid, self.cfg.eval_batches)?;
+                self.metrics.record_eval(step, el, ea);
+                if ea > best_acc {
+                    best_acc = ea;
+                    self.best_state = Some(self.state.clone());
+                }
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[{}/{}] eval @ {step}: loss {el:.4} acc {ea:.3}",
+                        self.cfg.task, self.cfg.attention
+                    );
+                }
+            }
+        }
+        // test accuracy of the best checkpoint (paper protocol)
+        let best = self.best_state.clone().unwrap_or_else(|| self.state.clone());
+        let (_, test_acc) = self.evaluate_state(&best, Split::Test, self.cfg.eval_batches)?;
+        if let Some(path) = &self.cfg.checkpoint_path {
+            checkpoint::save(
+                path,
+                &self.exec_train.spec.inputs[..self.num_state()],
+                &best,
+            )?;
+        }
+        let last_eval = self.metrics.evals.last().cloned();
+        Ok(TrainResult {
+            best_eval_acc: best_acc.max(0.0),
+            final_eval_acc: last_eval.as_ref().map(|e| e.acc).unwrap_or(0.0),
+            final_eval_loss: last_eval.as_ref().map(|e| e.loss).unwrap_or(f32::NAN),
+            test_acc,
+            total_seconds: start.elapsed().as_secs_f64(),
+            metrics: std::mem::take(&mut self.metrics),
+        })
+    }
+
+    /// Restore state from a checkpoint file.
+    pub fn restore(&mut self, path: &std::path::Path) -> Result<()> {
+        let (names, tensors) = checkpoint::load(path)?;
+        let want = &self.exec_train.spec.inputs[..self.num_state()];
+        if names.len() != want.len() {
+            return Err(Error::Other(format!(
+                "checkpoint has {} tensors, artifact expects {}",
+                names.len(),
+                want.len()
+            )));
+        }
+        for (name, spec) in names.iter().zip(want) {
+            if name != &spec.name {
+                return Err(Error::Other(format!(
+                    "checkpoint tensor {name} != artifact leaf {}",
+                    spec.name
+                )));
+            }
+        }
+        self.state = tensors;
+        Ok(())
+    }
+}

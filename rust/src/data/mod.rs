@@ -1,0 +1,9 @@
+//! Synthetic LRA workload generators (filled in data/*.rs).
+pub mod batch;
+pub mod image;
+pub mod listops;
+pub mod pathfinder;
+pub mod retrieval;
+pub mod text;
+
+pub use batch::{Batch, Dataset, Split};

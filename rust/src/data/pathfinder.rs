@@ -1,0 +1,228 @@
+//! Procedural Pathfinder (the LRA/Linsley et al. substitute).
+//!
+//! The Pathfinder task: a 32x32 image with two endpoint dots and dashed
+//! curves; the label is whether the dots are connected by one of the
+//! curves.  We render exactly that structure (DESIGN.md §5): a jittered
+//! lattice path between the endpoints (positive) or two disjoint dead-end
+//! curves from the endpoints (negative), plus distractor dashes in both
+//! classes.  Rasterised row-major to a 1024-token grayscale sequence —
+//! the spatial long-range dependency the paper highlights.
+
+use crate::data::batch::ExampleGen;
+use crate::runtime::manifest::TaskConfig;
+use crate::util::rng::Rng;
+
+pub struct PathfinderGen {
+    side: usize,
+}
+
+const INK: i32 = 255;
+const DOT: i32 = 200;
+
+impl PathfinderGen {
+    pub fn new(task: &TaskConfig) -> PathfinderGen {
+        let side = (task.seq_len as f64).sqrt() as usize;
+        assert_eq!(side * side, task.seq_len, "pathfinder needs a square seq_len");
+        PathfinderGen { side }
+    }
+
+    /// A jittered path from `a` toward `b`; returns visited cells.
+    fn walk(&self, rng: &mut Rng, a: (usize, usize), b: (usize, usize)) -> Vec<(usize, usize)> {
+        let mut cells = Vec::new();
+        let (mut x, mut y) = (a.0 as i32, a.1 as i32);
+        let (tx, ty) = (b.0 as i32, b.1 as i32);
+        let side = self.side as i32;
+        let mut guard = 0;
+        while (x, y) != (tx, ty) && guard < 4 * side * side {
+            guard += 1;
+            cells.push((x as usize, y as usize));
+            // step toward target with 25% random detour
+            let dx = (tx - x).signum();
+            let dy = (ty - y).signum();
+            let (sx, sy) = if rng.uniform() < 0.25 {
+                match rng.below(4) {
+                    0 => (1, 0),
+                    1 => (-1, 0),
+                    2 => (0, 1),
+                    _ => (0, -1),
+                }
+            } else if dx != 0 && (dy == 0 || rng.uniform() < 0.5) {
+                (dx, 0)
+            } else {
+                (0, dy)
+            };
+            x = (x + sx).clamp(0, side - 1);
+            y = (y + sy).clamp(0, side - 1);
+        }
+        cells.push((x as usize, y as usize));
+        cells
+    }
+
+    /// Draw a cell list as a dashed stroke (2-on / 1-off).
+    fn draw_dashed(&self, img: &mut [i32], cells: &[(usize, usize)]) {
+        for (i, &(x, y)) in cells.iter().enumerate() {
+            if i % 3 != 2 {
+                img[y * self.side + x] = INK;
+            }
+        }
+    }
+
+    fn random_point(&self, rng: &mut Rng) -> (usize, usize) {
+        (rng.below(self.side), rng.below(self.side))
+    }
+}
+
+impl ExampleGen for PathfinderGen {
+    fn generate(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let label = rng.below(2) as i32;
+        let side = self.side;
+        let mut img = vec![0i32; side * side];
+
+        // endpoints at least half the grid apart (long-range by construction)
+        let (a, b) = loop {
+            let a = self.random_point(rng);
+            let b = self.random_point(rng);
+            let dist = a.0.abs_diff(b.0) + a.1.abs_diff(b.1);
+            if dist >= side {
+                break (a, b);
+            }
+        };
+
+        if label == 1 {
+            let path = self.walk(rng, a, b);
+            self.draw_dashed(&mut img, &path);
+        } else {
+            // two dead-end curves leaving the endpoints, not touching
+            let mid_a = self.random_point(rng);
+            let mid_b = self.random_point(rng);
+            let pa = self.walk(rng, a, mid_a);
+            let pb = self.walk(rng, b, mid_b);
+            // truncate so they cover less ground and cannot accidentally join
+            let pa = &pa[..pa.len().min(side)];
+            let pb = &pb[..pb.len().min(side)];
+            self.draw_dashed(&mut img, pa);
+            self.draw_dashed(&mut img, pb);
+        }
+
+        // distractor dashes (both classes): short random strokes
+        for _ in 0..3 {
+            let s = self.random_point(rng);
+            let e = self.random_point(rng);
+            let cells = self.walk(rng, s, e);
+            let cells = &cells[..cells.len().min(side / 2)];
+            self.draw_dashed(&mut img, cells);
+        }
+
+        // endpoint dots drawn last (distinct intensity)
+        img[a.1 * side + a.0] = DOT;
+        img[b.1 * side + b.0] = DOT;
+        (img, label)
+    }
+
+    fn name(&self) -> &'static str {
+        "pathfinder"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> TaskConfig {
+        TaskConfig {
+            name: "pathfinder".into(),
+            seq_len: 1024,
+            vocab_size: 256,
+            num_classes: 2,
+            batch_size: 4,
+            dual: false,
+        }
+    }
+
+    /// flood fill over inked cells (8-connected, dashes bridge 1-cell gaps
+    /// via a 2-cell reach) from one dot, checking the other is reachable.
+    fn connected(img: &[i32], side: usize) -> bool {
+        let dots: Vec<usize> = img
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == DOT)
+            .map(|(i, _)| i)
+            .collect();
+        if dots.len() < 2 {
+            return false;
+        }
+        let idx = |x: i64, y: i64| (y * side as i64 + x) as usize;
+        let mut seen = vec![false; img.len()];
+        let mut stack = vec![dots[0]];
+        seen[dots[0]] = true;
+        while let Some(p) = stack.pop() {
+            if p == dots[1] {
+                return true;
+            }
+            let (x, y) = ((p % side) as i64, (p / side) as i64);
+            for dy in -2i64..=2 {
+                for dx in -2i64..=2 {
+                    let (nx, ny) = (x + dx, y + dy);
+                    if nx < 0 || ny < 0 || nx >= side as i64 || ny >= side as i64 {
+                        continue;
+                    }
+                    let q = idx(nx, ny);
+                    if !seen[q] && img[q] > 0 {
+                        seen[q] = true;
+                        stack.push(q);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn positive_examples_are_connected() {
+        let g = PathfinderGen::new(&task());
+        let mut checked = 0;
+        for s in 0..60 {
+            let mut rng = Rng::new(s);
+            let (img, label) = g.generate(&mut rng);
+            if label == 1 {
+                assert!(connected(&img, 32), "positive not connected, seed {s}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn classes_differ_in_connectivity_rate() {
+        // negatives may occasionally connect through distractors, but the
+        // rate must be far below positives'
+        let g = PathfinderGen::new(&task());
+        let (mut pos_conn, mut n_pos) = (0, 0);
+        let (mut neg_conn, mut n_neg) = (0, 0);
+        for s in 0..120 {
+            let mut rng = Rng::new(1000 + s);
+            let (img, label) = g.generate(&mut rng);
+            let c = connected(&img, 32);
+            if label == 1 {
+                n_pos += 1;
+                pos_conn += usize::from(c);
+            } else {
+                n_neg += 1;
+                neg_conn += usize::from(c);
+            }
+        }
+        let pos_rate = pos_conn as f32 / n_pos as f32;
+        let neg_rate = neg_conn as f32 / n_neg as f32;
+        assert!(pos_rate > 0.95, "pos {pos_rate}");
+        assert!(neg_rate < 0.5, "neg {neg_rate}");
+    }
+
+    #[test]
+    fn image_is_sparse_ink() {
+        let g = PathfinderGen::new(&task());
+        let mut rng = Rng::new(2);
+        let (img, _) = g.generate(&mut rng);
+        let ink = img.iter().filter(|&&v| v > 0).count();
+        assert!(ink > 10 && ink < img.len() / 4, "ink {ink}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Synthetic document-pair retrieval (the LRA/AAN substitute).
+//!
+//! The AAN task asks whether two long documents cite each other — i.e.
+//! whether they share sparse, position-independent evidence.  We preserve
+//! exactly that (DESIGN.md §5): positive pairs share a document "signature"
+//! (a handful of rare byte 5-grams planted at random positions in both
+//! documents); negative pairs carry different signatures.  A model must
+//! match sparse features *across* two long sequences.
+
+use crate::data::batch::ExampleGen;
+use crate::runtime::manifest::TaskConfig;
+use crate::util::rng::Rng;
+
+pub struct RetrievalGen {
+    seq_len: usize,
+    sig_len: usize,
+    sigs_per_doc: usize,
+}
+
+impl RetrievalGen {
+    pub fn new(task: &TaskConfig) -> RetrievalGen {
+        assert!(task.dual, "retrieval is a dual-tower task");
+        RetrievalGen {
+            seq_len: task.seq_len,
+            sig_len: 5,
+            sigs_per_doc: (task.seq_len / 64).max(2),
+        }
+    }
+
+    fn fill_doc(&self, rng: &mut Rng, signature: &[Vec<i32>]) -> Vec<i32> {
+        // background: random lowercase bytes
+        let mut doc: Vec<i32> = (0..self.seq_len)
+            .map(|_| 97 + rng.below(26) as i32)
+            .collect();
+        // plant each signature n-gram at a random (non-overlapping-ish) spot
+        for sig in signature {
+            let pos = rng.below(self.seq_len - self.sig_len);
+            doc[pos..pos + self.sig_len].copy_from_slice(sig);
+        }
+        doc
+    }
+
+    fn random_signature(&self, rng: &mut Rng) -> Vec<Vec<i32>> {
+        (0..self.sigs_per_doc)
+            .map(|_| {
+                // signatures use digits+punct so they are rare vs background
+                (0..self.sig_len).map(|_| 33 + rng.below(26) as i32).collect()
+            })
+            .collect()
+    }
+}
+
+impl ExampleGen for RetrievalGen {
+    fn generate(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let label = rng.below(2) as i32;
+        let sig_a = self.random_signature(rng);
+        let sig_b = if label == 1 {
+            sig_a.clone()
+        } else {
+            self.random_signature(rng)
+        };
+        let mut toks = self.fill_doc(rng, &sig_a);
+        toks.extend(self.fill_doc(rng, &sig_b));
+        (toks, label)
+    }
+
+    fn name(&self) -> &'static str {
+        "retrieval"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> TaskConfig {
+        TaskConfig {
+            name: "retrieval".into(),
+            seq_len: 128,
+            vocab_size: 256,
+            num_classes: 2,
+            batch_size: 4,
+            dual: true,
+        }
+    }
+
+    #[test]
+    fn positive_pairs_share_ngrams_negative_dont() {
+        let g = RetrievalGen::new(&task());
+        let shared_5grams = |a: &[i32], b: &[i32]| -> usize {
+            let mut count = 0;
+            for w in a.windows(5) {
+                // signatures are drawn from the rare byte range 33..59
+                if w.iter().all(|&t| (33..59).contains(&t))
+                    && b.windows(5).any(|x| x == w)
+                {
+                    count += 1;
+                }
+            }
+            count
+        };
+        let mut pos_ok = 0;
+        let mut neg_ok = 0;
+        let (mut n_pos, mut n_neg) = (0, 0);
+        for s in 0..80 {
+            let mut rng = Rng::new(s);
+            let (toks, label) = g.generate(&mut rng);
+            let (a, b) = toks.split_at(128);
+            let shared = shared_5grams(a, b);
+            if label == 1 {
+                n_pos += 1;
+                pos_ok += usize::from(shared >= 1);
+            } else {
+                n_neg += 1;
+                neg_ok += usize::from(shared == 0);
+            }
+        }
+        assert!(pos_ok as f32 >= 0.9 * n_pos as f32, "{pos_ok}/{n_pos}");
+        assert!(neg_ok as f32 >= 0.9 * n_neg as f32, "{neg_ok}/{n_neg}");
+    }
+
+    #[test]
+    fn emits_two_documents() {
+        let g = RetrievalGen::new(&task());
+        let mut rng = Rng::new(0);
+        let (toks, _) = g.generate(&mut rng);
+        assert_eq!(toks.len(), 256);
+    }
+}

@@ -1,0 +1,38 @@
+//! # Skyformer — reproduction library
+//!
+//! Rust coordinator (Layer 3) for the Skyformer NeurIPS-2021 paper:
+//! *"Skyformer: Remodel Self-Attention with Gaussian Kernel and Nyström
+//! Method"* (Chen, Zeng, Ji, Yang).
+//!
+//! The three-layer architecture (DESIGN.md):
+//!
+//! * **Layer 1** — Pallas kernels (python, build time): Gaussian-kernel
+//!   attention, online-softmax attention, Nyström landmark blocks,
+//!   Newton–Schulz inverse.
+//! * **Layer 2** — JAX model (python, build time): the LRA 2-layer
+//!   transformer with 9 pluggable attention mechanisms, lowered by
+//!   `python/compile/aot.py` to HLO-text artifacts.
+//! * **Layer 3** — this crate: loads the artifacts via PJRT
+//!   ([`runtime`]), generates the LRA workloads ([`data`]), drives
+//!   training/evaluation ([`coordinator`]), and regenerates every table
+//!   and figure of the paper ([`report`], `rust/benches/`, `examples/`).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! The crate also carries native-rust reference implementations of all the
+//! attention mechanisms ([`attention`]) and of the modified Nyström method
+//! ([`nystrom`]) on a dense f32 matrix substrate ([`linalg`]) — these power
+//! the paper's matrix-approximation study (Figure 1) and the
+//! property-test suite without any HLO involvement.
+
+pub mod attention;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod nystrom;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+pub use util::error::{Error, Result};

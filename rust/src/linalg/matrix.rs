@@ -1,0 +1,291 @@
+//! Row-major dense f32 matrix with the operations the approximation study
+//! needs. The matmul is cache-blocked + ikj-ordered — enough to keep the
+//! Figure-1 sweep (n up to 1024) interactive without BLAS.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Matrix {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    /// i.i.d. N(0, sigma^2) entries.
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, sigma: f32) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| rng.normal() * sigma)
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Select a subset of rows.
+    pub fn take_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Stack two matrices vertically.
+    pub fn vcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix {
+            rows: self.rows + other.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Cache-blocked matmul, ikj inner order (unit-stride on both operands).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        const BLOCK: usize = 64;
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for kk in (0..k).step_by(BLOCK) {
+            let k_end = (kk + BLOCK).min(k);
+            for i in 0..m {
+                let a_row = self.row(i);
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for kx in kk..k_end {
+                    let a = a_row[kx];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[kx * n..kx * n + n];
+                    for (o, &b) in out_row.iter_mut().zip(b_row) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    /// Add `s` to the diagonal (ridge).
+    pub fn add_diag(&self, s: f32) -> Matrix {
+        assert_eq!(self.rows, self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            out[(i, i)] += s;
+        }
+        out
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// y = self @ x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// y = self^T @ x.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (yj, &a) in y.iter_mut().zip(self.row(i)) {
+                *yj += xi * a;
+            }
+        }
+        y
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(&mut rng, 17, 13, 1.0);
+        let c = a.matmul(&Matrix::eye(13));
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn matmul_matches_naive_blocked_boundaries() {
+        let mut rng = Rng::new(1);
+        // sizes straddling the 64 block boundary
+        let a = Matrix::randn(&mut rng, 65, 130, 1.0);
+        let b = Matrix::randn(&mut rng, 130, 67, 1.0);
+        let c = a.matmul(&b);
+        for &(i, j) in &[(0, 0), (64, 66), (30, 10)] {
+            let want: f32 = (0..130).map(|k| a[(i, k)] * b[(k, j)]).sum();
+            assert!((c[(i, j)] - want).abs() < 1e-3 * want.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(&mut rng, 5, 9, 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(&mut rng, 8, 6, 1.0);
+        let x: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let y = a.matvec(&x);
+        let xm = Matrix {
+            rows: 6,
+            cols: 1,
+            data: x.clone(),
+        };
+        let ym = a.matmul(&xm);
+        for i in 0..8 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn take_rows_and_vcat() {
+        let a = Matrix::from_rows(vec![vec![1.0], vec![2.0], vec![3.0]]);
+        let b = a.take_rows(&[2, 0]);
+        assert_eq!(b.data, vec![3.0, 1.0]);
+        let c = a.vcat(&b);
+        assert_eq!(c.rows, 5);
+        assert_eq!(c.data, vec![1.0, 2.0, 3.0, 3.0, 1.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense f32 linear algebra substrate.
+//!
+//! Built from scratch (no BLAS in the offline environment): a row-major
+//! [`Matrix`] with a cache-blocked matmul, power-iteration spectral norm
+//! ([`norms`]), one-sided Jacobi SVD ([`svd`]), and a Gauss–Jordan /
+//! pseudo-inverse ([`solve`]).  Powers the Figure-1 approximation study,
+//! the Figure-4 singular-value decay study, and the native Nyström module.
+
+pub mod matrix;
+pub mod norms;
+pub mod solve;
+pub mod svd;
+
+pub use matrix::Matrix;

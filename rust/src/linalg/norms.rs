@@ -1,0 +1,115 @@
+//! Spectral norm via power iteration on `A^T A` — the metric of the paper's
+//! Definition 2 ((eps, delta)-MA) and the y-axis of Figure 1.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Largest singular value of `a`, via power iteration on x -> A^T (A x).
+///
+/// Deterministic start vector + restart with a random vector if the first
+/// converges to a null direction.  Relative accuracy ~1e-4 in <= `max_iter`.
+pub fn spectral_norm(a: &Matrix) -> f32 {
+    spectral_norm_iter(a, 300)
+}
+
+pub fn spectral_norm_iter(a: &Matrix, max_iter: usize) -> f32 {
+    if a.rows == 0 || a.cols == 0 {
+        return 0.0;
+    }
+    let mut rng = Rng::new(0x5EC7_0A17);
+    let mut best = 0.0f32;
+    for attempt in 0..2 {
+        let mut x: Vec<f32> = if attempt == 0 {
+            (0..a.cols).map(|i| 1.0 + (i as f32) * 1e-3).collect()
+        } else {
+            (0..a.cols).map(|_| rng.normal()).collect()
+        };
+        normalize(&mut x);
+        let mut sigma_prev = 0.0f32;
+        for _ in 0..max_iter {
+            let y = a.matvec(&x);
+            let mut z = a.matvec_t(&y);
+            let nz = norm(&z);
+            if nz == 0.0 {
+                break;
+            }
+            for v in &mut z {
+                *v /= nz;
+            }
+            x = z;
+            let sigma = nz.sqrt();
+            if (sigma - sigma_prev).abs() <= 1e-5 * sigma.max(1e-20) {
+                sigma_prev = sigma;
+                break;
+            }
+            sigma_prev = sigma;
+        }
+        best = best.max(sigma_prev);
+        if best > 0.0 {
+            break;
+        }
+    }
+    best
+}
+
+fn norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+fn normalize(x: &mut [f32]) {
+    let n = norm(x);
+    if n > 0.0 {
+        for v in x {
+            *v /= n;
+        }
+    }
+}
+
+/// Relative spectral error ||A - B|| / ||A||, Figure 1's y-axis.
+pub fn relative_spectral_error(a: &Matrix, b: &Matrix) -> f32 {
+    let diff = a.sub(b);
+    spectral_norm(&diff) / spectral_norm(a).max(1e-20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_norm() {
+        let mut m = Matrix::zeros(4, 4);
+        for (i, v) in [3.0f32, -7.0, 2.0, 0.5].iter().enumerate() {
+            m[(i, i)] = *v;
+        }
+        assert!((spectral_norm(&m) - 7.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rank_one_norm() {
+        // ||u v^T|| = ||u|| ||v||
+        let u = [1.0f32, 2.0, 2.0]; // norm 3
+        let v = [3.0f32, 4.0]; // norm 5
+        let m = Matrix::from_fn(3, 2, |i, j| u[i] * v[j]);
+        assert!((spectral_norm(&m) - 15.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn orthogonal_matrix_norm_is_one() {
+        let c = (0.3f32).cos();
+        let s = (0.3f32).sin();
+        let m = Matrix::from_rows(vec![vec![c, -s], vec![s, c]]);
+        assert!((spectral_norm(&m) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        assert_eq!(spectral_norm(&Matrix::zeros(3, 5)), 0.0);
+    }
+
+    #[test]
+    fn relative_error_identity() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(&mut rng, 20, 20, 1.0);
+        assert!(relative_spectral_error(&a, &a) < 1e-6);
+    }
+}

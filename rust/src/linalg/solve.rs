@@ -1,0 +1,164 @@
+//! Exact and iterative inverses on the dense substrate.
+//!
+//! * [`gauss_jordan_inverse`] — partial-pivot exact inverse (the "CPU
+//!   division-based" method of the paper's §4.4 discussion; used as the
+//!   oracle the Newton–Schulz iteration is judged against).
+//! * [`ns_inverse`] — the paper's preconditioned Newton–Schulz: the native
+//!   twin of the L1 Pallas kernel, used by the Figure-1 study.
+
+use crate::linalg::Matrix;
+
+/// Exact inverse by Gauss–Jordan with partial pivoting. Returns `None` if
+/// the matrix is numerically singular.
+pub fn gauss_jordan_inverse(m: &Matrix) -> Option<Matrix> {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let mut a = m.clone();
+    let mut inv = Matrix::eye(n);
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = a[(col, col)].abs();
+        for r in col + 1..n {
+            if a[(r, col)].abs() > best {
+                best = a[(r, col)].abs();
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                let t = a[(col, j)];
+                a[(col, j)] = a[(piv, j)];
+                a[(piv, j)] = t;
+                let t = inv[(col, j)];
+                inv[(col, j)] = inv[(piv, j)];
+                inv[(piv, j)] = t;
+            }
+        }
+        let d = a[(col, col)];
+        for j in 0..n {
+            a[(col, j)] /= d;
+            inv[(col, j)] /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = a[(r, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                a[(r, j)] -= f * a[(col, j)];
+                inv[(r, j)] -= f * inv[(col, j)];
+            }
+        }
+    }
+    Some(inv)
+}
+
+/// Lemma-3 preconditioner: returns (m_hat, d_inv_sqrt) with
+/// `m_hat = D^{-1/2} (M + gamma I) D^{-1/2}`, `D = diag((M+gamma I) 1)`.
+pub fn ns_preconditioner(m: &Matrix, gamma: f32) -> (Matrix, Vec<f32>) {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let mg = m.add_diag(gamma);
+    let d_inv_sqrt: Vec<f32> = (0..n)
+        .map(|i| {
+            let row_sum: f32 = mg.row(i).iter().sum();
+            1.0 / row_sum.max(1e-30).sqrt()
+        })
+        .collect();
+    let m_hat = Matrix::from_fn(n, n, |i, j| d_inv_sqrt[i] * mg[(i, j)] * d_inv_sqrt[j]);
+    (m_hat, d_inv_sqrt)
+}
+
+/// Preconditioned Newton–Schulz approximation of `(M + gamma I)^{-1}`
+/// (paper §4.4): the order-3 hyperpower iteration
+/// `Z <- 1/4 Z (13 I - A Z (15 I - A Z (7 I - A Z)))`, seeded with
+/// `Z0 = A^T / (||A||_1 ||A||_inf)`.
+pub fn ns_inverse(m: &Matrix, gamma: f32, iters: usize) -> Matrix {
+    let n = m.rows;
+    let (a, d_inv_sqrt) = ns_preconditioner(m, gamma);
+    let eye = Matrix::eye(n);
+
+    let norm1 = (0..n)
+        .map(|j| (0..n).map(|i| a[(i, j)].abs()).sum::<f32>())
+        .fold(0.0f32, f32::max);
+    let norminf = (0..n)
+        .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+        .fold(0.0f32, f32::max);
+    let mut z = a.transpose().scale(1.0 / (norm1 * norminf).max(1e-30));
+
+    for _ in 0..iters {
+        let az = a.matmul(&z);
+        let t1 = eye.scale(7.0).sub(&az);
+        let t2 = eye.scale(15.0).sub(&az.matmul(&t1));
+        let t3 = eye.scale(13.0).sub(&az.matmul(&t2));
+        z = z.matmul(&t3).scale(0.25);
+    }
+    // undo preconditioning: (M+gI)^{-1} = D^{-1/2} Z D^{-1/2}
+    Matrix::from_fn(n, n, |i, j| d_inv_sqrt[i] * z[(i, j)] * d_inv_sqrt[j])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_psd(seed: u64, n: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::randn(&mut rng, n, n, 1.0);
+        b.matmul(&b.transpose()).scale(1.0 / n as f32).add_diag(0.1)
+    }
+
+    #[test]
+    fn gauss_jordan_inverts() {
+        let m = random_psd(0, 24);
+        let inv = gauss_jordan_inverse(&m).unwrap();
+        let prod = m.matmul(&inv);
+        let err = prod.sub(&Matrix::eye(24)).max_abs();
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn gauss_jordan_rejects_singular() {
+        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(gauss_jordan_inverse(&m).is_none());
+    }
+
+    fn gaussian_gram(seed: u64, n: usize, p: usize) -> Matrix {
+        // Lemma 3's preconditioner assumes a *kernel* matrix (non-negative
+        // entries) — that is the only input class the paper feeds it.
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(&mut rng, n, p, 0.5);
+        crate::nystrom::kernel_matrix(crate::nystrom::Kernel::Gaussian, &x, &x)
+    }
+
+    #[test]
+    fn ns_matches_exact_inverse() {
+        let m = gaussian_gram(1, 32, 8);
+        let gamma = 1e-3;
+        let exact = gauss_jordan_inverse(&m.add_diag(gamma)).unwrap();
+        let approx = ns_inverse(&m, gamma, 30);
+        let scale = exact.max_abs();
+        let err = exact.sub(&approx).max_abs() / scale;
+        assert!(err < 2e-3, "relative err {err}");
+    }
+
+    #[test]
+    fn preconditioner_spectrum_in_unit_interval() {
+        // Lemma 3 numerically: ||I - m_hat||_2 < 1
+        let m = random_psd(2, 40);
+        // make it look like a kernel matrix (positive entries)
+        let k = Matrix::from_fn(40, 40, |i, j| (-0.05 * (m[(i, j)] - m[(j, i)]).abs()).exp() * (m[(i, j)].abs() + 0.1));
+        let sym = k.add(&k.transpose()).scale(0.5);
+        let psd = sym.matmul(&sym.transpose()).scale(1.0 / 40.0);
+        let (m_hat, _) = ns_preconditioner(&psd, 1e-3);
+        let resid = crate::linalg::norms::spectral_norm(&Matrix::eye(40).sub(&m_hat));
+        assert!(resid < 1.0 + 1e-4, "resid {resid}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Singular values via one-sided Jacobi — powers the Figure-4
+//! singular-value-decay study on attention outputs (n x 64 matrices).
+//!
+//! One-sided Jacobi orthogonalises the columns of A by plane rotations;
+//! the column norms of the converged matrix are the singular values.
+//! O(cols^2 · rows) per sweep, fine for cols <= 128.
+
+use crate::linalg::Matrix;
+
+/// All singular values of `a`, descending. Converges to ~1e-5 relative.
+pub fn singular_values(a: &Matrix) -> Vec<f32> {
+    // work on the matrix with fewer columns
+    let mut work = if a.rows < a.cols { a.transpose() } else { a.clone() };
+    let n = work.cols;
+    let max_sweeps = 30;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // gram entries of columns p, q
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..work.rows {
+                    let xp = work[(i, p)] as f64;
+                    let xq = work[(i, q)] as f64;
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                off += apq.abs();
+                if apq.abs() <= 1e-12 * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..work.rows {
+                    let xp = work[(i, p)];
+                    let xq = work[(i, q)];
+                    work[(i, p)] = (c * xp as f64 - s * xq as f64) as f32;
+                    work[(i, q)] = (s * xp as f64 + c * xq as f64) as f32;
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+    let mut sv: Vec<f32> = (0..n)
+        .map(|j| {
+            (0..work.rows)
+                .map(|i| (work[(i, j)] as f64).powi(2))
+                .sum::<f64>()
+                .sqrt() as f32
+        })
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// Condition number sigma_max / sigma_min (inf if singular).
+pub fn condition_number(a: &Matrix) -> f32 {
+    let sv = singular_values(a);
+    let max = sv.first().copied().unwrap_or(0.0);
+    let min = sv.last().copied().unwrap_or(0.0);
+    if min <= 0.0 {
+        f32::INFINITY
+    } else {
+        max / min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_singular_values() {
+        let mut m = Matrix::zeros(4, 4);
+        for (i, v) in [3.0f32, 7.0, 2.0, 0.5].iter().enumerate() {
+            m[(i, i)] = *v;
+        }
+        let sv = singular_values(&m);
+        let want = [7.0, 3.0, 2.0, 0.5];
+        for (a, b) in sv.iter().zip(want) {
+            assert!((a - b).abs() < 1e-4, "{sv:?}");
+        }
+    }
+
+    #[test]
+    fn matches_spectral_norm() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(&mut rng, 40, 12, 1.0);
+        let sv = singular_values(&a);
+        let sn = crate::linalg::norms::spectral_norm(&a);
+        assert!((sv[0] - sn).abs() < 1e-2 * sn, "{} vs {}", sv[0], sn);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // sum sigma_i^2 == ||A||_F^2
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(&mut rng, 25, 10, 1.0);
+        let sv = singular_values(&a);
+        let fro2: f32 = sv.iter().map(|s| s * s).sum();
+        let want = a.frobenius().powi(2);
+        assert!((fro2 - want).abs() < 1e-2 * want);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // rank-1 matrix: one nonzero singular value
+        let u = [1.0f32, -2.0, 0.5];
+        let v = [2.0f32, 1.0];
+        let m = Matrix::from_fn(3, 2, |i, j| u[i] * v[j]);
+        let sv = singular_values(&m);
+        assert!(sv[1] < 1e-4 * sv[0], "{sv:?}");
+    }
+
+    #[test]
+    fn wide_matrix_transposed_internally() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(&mut rng, 6, 50, 1.0);
+        let sv_a = singular_values(&a);
+        let sv_t = singular_values(&a.transpose());
+        for (x, y) in sv_a.iter().zip(&sv_t) {
+            assert!((x - y).abs() < 1e-3 * x.max(1.0));
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! `skyformer` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §4):
+//!
+//! ```text
+//! skyformer info                              # list built artifacts
+//! skyformer train   --task listops --attention skyformer --steps 300
+//! skyformer sweep   --tasks listops --attentions softmax,skyformer --seeds 3
+//! skyformer approx  --n 256 --features 16,32,64,128,256    # Figure 1
+//! skyformer instability --task listops                     # Table 3
+//! skyformer svd     --task listops --attention softmax     # Figure 4
+//! ```
+
+use std::path::PathBuf;
+
+use skyformer::attention::{self, exact, probes};
+use skyformer::coordinator::instability::InstabilityProbe;
+use skyformer::coordinator::scheduler::Schedule;
+use skyformer::coordinator::trainer::{TrainConfig, Trainer};
+use skyformer::data::batch::Split;
+use skyformer::linalg::{norms, svd, Matrix};
+use skyformer::report::tables::{fmt_bytes, fmt_secs, Table};
+use skyformer::runtime::engine::Engine;
+use skyformer::util::args::Args;
+use skyformer::util::rng::Rng;
+use skyformer::Result;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(args),
+        "train" => train(args),
+        "sweep" => sweep(args),
+        "approx" => approx(args),
+        "instability" => instability(args),
+        "svd" => svd_cmd(args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"skyformer — Skyformer (NeurIPS 2021) reproduction coordinator
+
+USAGE: skyformer <command> [--flags]
+
+COMMANDS
+  info          list built artifacts and their configs
+  train         train one (task, attention) model
+                  --task listops --attention skyformer [--steps 200]
+                  [--seed 0] [--lr 1e-4] [--eval-every 50] [--pallas]
+                  [--checkpoint out.ckpt] [--verbose]
+  sweep         Table 1/2: train a grid and print accuracy/time/memory rows
+                  --tasks listops,text --attentions softmax,skyformer
+                  [--seeds 1] [--steps 200] [--curves out.json]
+  approx        Figure 1: spectral-norm error vs #features
+                  [--n 256] [--features 16,32,64,128,256]
+                  [--regimes init,pretrained] [--trials 3]
+  instability   Table 3: 20-step instability-score ratios vs self-attention
+                  --task listops [--attentions kernelized,skyformer,nystromformer]
+  svd           Figure 4: singular-value decay of attention output
+                  --task listops --attention softmax [--steps 100]
+GLOBAL
+  --artifacts DIR   artifact directory (default: artifacts)
+"#;
+
+fn info(args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts_dir(args))?;
+    println!("platform: {}", engine.platform());
+    let mut t = Table::new(
+        "Artifacts",
+        &["name", "kind", "task", "attention", "inputs", "outputs", "bytes"],
+    );
+    for (name, spec) in &engine.manifest().artifacts {
+        t.row(vec![
+            name.clone(),
+            spec.kind.clone(),
+            spec.task.clone(),
+            spec.attention.clone(),
+            spec.inputs.len().to_string(),
+            spec.outputs.len().to_string(),
+            fmt_bytes(spec.input_bytes()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn train_config_from(args: &Args) -> Result<TrainConfig> {
+    let task = args.get_or("task", "listops").to_string();
+    let attention = args.get_or("attention", "skyformer").to_string();
+    let mut cfg = TrainConfig::new(&task, &attention);
+    cfg.pallas = args.get_bool("pallas");
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    cfg.eval_batches = args.get_usize("eval-batches", cfg.eval_batches)?;
+    cfg.seed = args.get_u64("seed", 0)?;
+    cfg.verbose = args.get_bool("verbose");
+    if let Some(lr) = args.get("lr") {
+        let lr: f32 = lr
+            .parse()
+            .map_err(|_| skyformer::Error::Config("bad --lr".into()))?;
+        cfg.schedule = Schedule::Warmup { base: lr, warmup_steps: 20 };
+    }
+    cfg.checkpoint_path = args.get("checkpoint").map(PathBuf::from);
+    Ok(cfg)
+}
+
+fn train(args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts_dir(args))?;
+    let mut cfg = train_config_from(args)?;
+    cfg.verbose = true;
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    let result = trainer.train()?;
+    println!(
+        "done: best_eval_acc={:.4} test_acc={:.4} final_loss={:.4} time={} peak={}",
+        result.best_eval_acc,
+        result.test_acc,
+        result.final_eval_loss,
+        fmt_secs(result.total_seconds),
+        fmt_bytes(result.metrics.peak_bytes),
+    );
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts_dir(args))?;
+    let tasks = args
+        .get_list("tasks")
+        .unwrap_or_else(|| vec!["listops".into()]);
+    let attentions = args.get_list("attentions").unwrap_or_else(|| {
+        vec!["softmax".into(), "kernelized".into(), "skyformer".into()]
+    });
+    let seeds = args.get_u64("seeds", 1)?;
+    let steps = args.get_usize("steps", 200)?;
+
+    let mut acc_table = Table::new(
+        "Table 1 (lite): classification accuracy (%)",
+        &["model", "task", "test_acc", "best_eval_acc", "seeds"],
+    );
+    let mut cost_table = Table::new(
+        "Table 2 (lite): per-step time and peak tensor memory",
+        &["model", "task", "s/step", "total", "peak_mem"],
+    );
+    let mut curves: Vec<skyformer::util::json::Value> = Vec::new();
+
+    for task in &tasks {
+        for attn in &attentions {
+            let mut accs = Vec::new();
+            let mut best_accs = Vec::new();
+            let mut step_secs = Vec::new();
+            let mut totals = Vec::new();
+            let mut peak = 0usize;
+            for seed in 0..seeds {
+                let mut cfg = train_config_from(args)?;
+                cfg.task = task.clone();
+                cfg.attention = attn.clone();
+                cfg.steps = steps;
+                cfg.seed = seed;
+                let mut trainer = match Trainer::new(&engine, cfg) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        eprintln!("skip {task}/{attn}: {e}");
+                        continue;
+                    }
+                };
+                let r = trainer.train()?;
+                eprintln!(
+                    "{task}/{attn} seed {seed}: test {:.3} best {:.3} ({})",
+                    r.test_acc,
+                    r.best_eval_acc,
+                    fmt_secs(r.total_seconds)
+                );
+                accs.push(r.test_acc);
+                best_accs.push(r.best_eval_acc);
+                step_secs.push(r.metrics.mean_step_seconds());
+                totals.push(r.total_seconds);
+                peak = peak.max(r.metrics.peak_bytes);
+                curves.push(skyformer::util::json::obj(vec![
+                    ("task", skyformer::util::json::s(task.clone())),
+                    ("attention", skyformer::util::json::s(attn.clone())),
+                    ("seed", skyformer::util::json::num(seed as f64)),
+                    ("metrics", r.metrics.to_json()),
+                ]));
+            }
+            if accs.is_empty() {
+                continue;
+            }
+            let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+            let meand = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+            acc_table.row(vec![
+                attn.clone(),
+                task.clone(),
+                format!("{:.2}", 100.0 * mean(&accs)),
+                format!("{:.2}", 100.0 * mean(&best_accs)),
+                accs.len().to_string(),
+            ]);
+            cost_table.row(vec![
+                attn.clone(),
+                task.clone(),
+                format!("{:.3}", meand(&step_secs)),
+                fmt_secs(meand(&totals)),
+                fmt_bytes(peak),
+            ]);
+        }
+    }
+    println!("{}", acc_table.render());
+    println!("{}", cost_table.render());
+    if let Some(path) = args.get("curves") {
+        let doc = skyformer::util::json::Value::Array(curves);
+        std::fs::write(path, skyformer::util::json::to_string(&doc))?;
+        println!("curves written to {path}");
+    }
+    Ok(())
+}
+
+fn approx(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 256)?;
+    let p = args.get_usize("p", 32)?;
+    let trials = args.get_u64("trials", 3)?;
+    let features: Vec<usize> = args
+        .get_list("features")
+        .unwrap_or_else(|| vec!["16".into(), "32".into(), "64".into(), "128".into(), "256".into()])
+        .iter()
+        .map(|s| s.parse().unwrap_or(64))
+        .collect();
+    let regimes: Vec<probes::Regime> = args
+        .get_list("regimes")
+        .unwrap_or_else(|| vec!["init".into(), "pretrained".into()])
+        .iter()
+        .filter_map(|r| match r.as_str() {
+            "init" => Some(probes::Regime::Init),
+            "pretrained" => Some(probes::Regime::Pretrained),
+            _ => None,
+        })
+        .collect();
+
+    for regime in regimes {
+        let mut headers = vec!["method".to_string()];
+        headers.extend(features.iter().map(|f| format!("d={f}")));
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!(
+                "Figure 1 (lite): relative spectral error, n={n}, {} weights",
+                regime.name()
+            ),
+            &header_refs,
+        );
+        let mut rng = Rng::new(args.get_u64("seed", 0)?).split_str(regime.name());
+        let pr = probes::probe(regime, n, p, &mut rng);
+        let target = exact::softmax_attention(&pr.q, &pr.k, &pr.v);
+        for method in attention::METHODS {
+            let mut cells = vec![method.name().to_string()];
+            for &d in &features {
+                let mut err_acc = 0.0f32;
+                for trial in 0..trials {
+                    let mut trng = rng.split(d as u64 * 1000 + trial);
+                    let approx =
+                        attention::approximate(method, &pr.q, &pr.k, &pr.v, d, &mut trng);
+                    err_acc += norms::relative_spectral_error(&target, &approx);
+                }
+                cells.push(format!("{:.4}", err_acc / trials as f32));
+            }
+            t.row(cells);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn instability(args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts_dir(args))?;
+    let task = args.get_or("task", "listops").to_string();
+    let attentions = args.get_list("attentions").unwrap_or_else(|| {
+        vec!["kernelized".into(), "skyformer".into(), "nystromformer".into()]
+    });
+    let steps = args.get_usize("steps", 20)?;
+    let lr = args.get_f32("lr", 1e-4)?;
+
+    // baseline: self-attention
+    let base_cfg = {
+        let mut c = TrainConfig::new(&task, "softmax");
+        c.seed = args.get_u64("seed", 0)?;
+        c
+    };
+    let mut probe = InstabilityProbe::new(&engine, base_cfg)?;
+    let base = probe.run(steps, lr)?;
+
+    let mut t = Table::new(
+        &format!("Table 3 (lite): instability-score ratio vs self-attention, task={task}"),
+        &["model", "mean_tau", "ratio"],
+    );
+    t.row(vec![
+        "softmax (baseline)".into(),
+        format!("{:.4e}", base.mean_tau()),
+        "1.00".into(),
+    ]);
+    for attn in attentions {
+        let mut cfg = TrainConfig::new(&task, &attn);
+        cfg.seed = args.get_u64("seed", 0)?;
+        let mut probe = match InstabilityProbe::new(&engine, cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("skip {attn}: {e}");
+                continue;
+            }
+        };
+        let r = probe.run(steps, lr)?;
+        // paper: per-step ratio averaged over steps
+        let ratio: f32 = r
+            .taus
+            .iter()
+            .zip(&base.taus)
+            .map(|(a, b)| a / b.max(1e-30))
+            .sum::<f32>()
+            / r.taus.len() as f32;
+        t.row(vec![
+            attn.clone(),
+            format!("{:.4e}", r.mean_tau()),
+            format!("{ratio:.2}"),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn svd_cmd(args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts_dir(args))?;
+    let task = args.get_or("task", "listops").to_string();
+    let attention = args.get_or("attention", "softmax").to_string();
+    let steps = args.get_usize("steps", 100)?;
+
+    // train briefly, then embed a test batch and report singular values
+    let mut cfg = TrainConfig::new(&task, &attention);
+    cfg.steps = steps;
+    cfg.seed = args.get_u64("seed", 0)?;
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    for s in 0..steps {
+        trainer.step(s)?;
+    }
+    let exec_embed = engine.load(&task, &attention, "embed", false)?;
+    let n_p = exec_embed.spec.num_params;
+    let batch = trainer.dataset_batch(Split::Test, 0);
+    let mut inputs: Vec<skyformer::runtime::tensor::Tensor> = trainer.state()[..n_p].to_vec();
+    inputs.push(batch.tokens);
+    inputs.push(skyformer::runtime::tensor::Tensor::scalar_u32(0));
+    let out = exec_embed.run(&inputs)?;
+    let emb = &out[0];
+    let shape = emb.shape().to_vec();
+    let m = Matrix {
+        rows: shape[0],
+        cols: shape[1],
+        data: emb.as_f32()?.to_vec(),
+    };
+    let sv = svd::singular_values(&m);
+    println!(
+        "Figure 4 (lite): singular values of pooled attention output ({task}/{attention}, {steps} steps)"
+    );
+    let head = sv[0].max(1e-20);
+    for (i, s) in sv.iter().enumerate() {
+        println!("  sigma[{i:>2}] = {s:.5}   (ratio {:.4})", s / head);
+    }
+    Ok(())
+}

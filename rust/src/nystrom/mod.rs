@@ -1,0 +1,237 @@
+//! Native-rust modified Nyström method (paper §4.2) on the dense substrate.
+//!
+//! The twin of the L1 Pallas implementation, used where the study needs
+//! materialised matrices (Figure 1, Theorem-2 empirics, property tests):
+//!
+//! 1. lift the asymmetric empirical kernel matrix `B = phi(Q, K)` into the
+//!    PSD completion `B_bar = phi([Q;K], [Q;K])` (Eq. 4);
+//! 2. uniform-subsample d of the 2n rows (Definition 1);
+//! 3. `B_tilde_bar = B_bar S (S^T B_bar S)^+ S^T B_bar` (Eq. 5);
+//! 4. read off the top-right n x n block (Eq. 6).
+//!
+//! The pseudo-inverse is either exact (Gauss–Jordan on CPU — the paper's
+//! "matrix inversion on CPU" reference point) or the preconditioned
+//! Newton–Schulz iteration (§4.4).
+
+pub mod theory;
+
+use crate::linalg::{solve, Matrix};
+use crate::util::rng::Rng;
+
+/// PSD kernel functions the paper uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    /// `kappa(x, y) = exp(-||x - y||^2 / 2)` on pre-scaled inputs
+    /// (bandwidth p^{1/4} folded into the scaling).
+    Gaussian,
+    /// `SM(x, y) = exp(x . y)` on pre-scaled inputs (the softmax kernel).
+    Softmax,
+}
+
+impl Kernel {
+    #[inline]
+    pub fn eval(&self, x: &[f32], y: &[f32]) -> f32 {
+        let dot: f32 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+        match self {
+            Kernel::Softmax => dot.exp(),
+            Kernel::Gaussian => {
+                let nx: f32 = x.iter().map(|a| a * a).sum();
+                let ny: f32 = y.iter().map(|a| a * a).sum();
+                (dot - 0.5 * nx - 0.5 * ny).exp()
+            }
+        }
+    }
+}
+
+/// Empirical kernel matrix `phi(a_i, b_j)`.
+pub fn kernel_matrix(kernel: Kernel, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols);
+    // matmul form: exp(A B^T [- norms]) — same hot loop as the Pallas kernel
+    let g = a.matmul(&b.transpose());
+    match kernel {
+        Kernel::Softmax => Matrix::from_fn(a.rows, b.rows, |i, j| g[(i, j)].exp()),
+        Kernel::Gaussian => {
+            let na: Vec<f32> = (0..a.rows)
+                .map(|i| 0.5 * a.row(i).iter().map(|x| x * x).sum::<f32>())
+                .collect();
+            let nb: Vec<f32> = (0..b.rows)
+                .map(|j| 0.5 * b.row(j).iter().map(|x| x * x).sum::<f32>())
+                .collect();
+            Matrix::from_fn(a.rows, b.rows, |i, j| (g[(i, j)] - na[i] - nb[j]).exp())
+        }
+    }
+}
+
+/// How to invert the landmark Gram matrix.
+#[derive(Debug, Clone, Copy)]
+pub enum Inverse {
+    /// Gauss–Jordan on `M + gamma I` (the CPU reference of §4.4).
+    Exact { gamma: f32 },
+    /// Preconditioned Newton–Schulz (the paper's accelerator-friendly path).
+    NewtonSchulz { gamma: f32, iters: usize },
+}
+
+impl Inverse {
+    fn apply(&self, m: &Matrix) -> Matrix {
+        match *self {
+            Inverse::Exact { gamma } => solve::gauss_jordan_inverse(&m.add_diag(gamma))
+                .unwrap_or_else(|| solve::ns_inverse(m, gamma.max(1e-3), 30)),
+            Inverse::NewtonSchulz { gamma, iters } => solve::ns_inverse(m, gamma, iters),
+        }
+    }
+}
+
+/// The modified Nyström approximation of `phi(q, k)` (n x m), using `d`
+/// uniformly-sampled landmark rows of `[Q; K]`.
+///
+/// Never materialises the (n+m)^2 lifted matrix: only the three blocks
+/// `phi(Q, L)`, `phi(L, L)`, `phi(L, K)` are formed — O((n+m) d) memory,
+/// the paper's complexity claim.
+pub fn modified_nystrom(
+    kernel: Kernel,
+    q: &Matrix,
+    k: &Matrix,
+    d: usize,
+    inverse: Inverse,
+    rng: &mut Rng,
+) -> Matrix {
+    let landmarks = rng.choose_distinct(q.rows + k.rows, d.min(q.rows + k.rows));
+    modified_nystrom_with_landmarks(kernel, q, k, &landmarks, inverse)
+}
+
+/// Deterministic-landmark variant (tests, ablations).
+pub fn modified_nystrom_with_landmarks(
+    kernel: Kernel,
+    q: &Matrix,
+    k: &Matrix,
+    landmarks: &[usize],
+    inverse: Inverse,
+) -> Matrix {
+    let x = q.vcat(k);
+    let lm = x.take_rows(landmarks);
+    let c_ql = kernel_matrix(kernel, q, &lm); // (n, d)
+    let c_lk = kernel_matrix(kernel, &lm, k); // (d, m)
+    let gram = kernel_matrix(kernel, &lm, &lm); // (d, d) PSD
+    let inv = inverse.apply(&gram);
+    c_ql.matmul(&inv).matmul(&c_lk)
+}
+
+/// Apply the approximation directly to V without materialising (n, m):
+/// `phi(Q,L) inv (phi(L,K) V)` — the O(n d) hot path.
+pub fn modified_nystrom_apply(
+    kernel: Kernel,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    landmarks: &[usize],
+    inverse: Inverse,
+) -> Matrix {
+    let x = q.vcat(k);
+    let lm = x.take_rows(landmarks);
+    let c_ql = kernel_matrix(kernel, q, &lm);
+    let c_lk = kernel_matrix(kernel, &lm, k);
+    let gram = kernel_matrix(kernel, &lm, &lm);
+    let inv = inverse.apply(&gram);
+    c_ql.matmul(&inv.matmul(&c_lk.matmul(v)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::spectral_norm;
+
+    fn qk(seed: u64, n: usize, p: usize, scale: f32) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let q = Matrix::randn(&mut rng, n, p, scale);
+        let k = Matrix::randn(&mut rng, n, p, scale);
+        (q, k)
+    }
+
+    #[test]
+    fn kernel_matrix_gaussian_diag_is_one() {
+        let (q, _) = qk(0, 20, 8, 0.7);
+        let c = kernel_matrix(Kernel::Gaussian, &q, &q);
+        for i in 0..20 {
+            assert!((c[(i, i)] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn full_landmarks_recover_matrix() {
+        let (q, k) = qk(1, 24, 8, 0.5);
+        let c = kernel_matrix(Kernel::Gaussian, &q, &k);
+        let landmarks: Vec<usize> = (0..48).collect();
+        let approx = modified_nystrom_with_landmarks(
+            Kernel::Gaussian,
+            &q,
+            &k,
+            &landmarks,
+            Inverse::Exact { gamma: 1e-6 },
+        );
+        let rel = spectral_norm(&c.sub(&approx)) / spectral_norm(&c);
+        assert!(rel < 1e-2, "rel {rel}");
+    }
+
+    #[test]
+    fn error_decreases_with_landmarks() {
+        let (q, k) = qk(2, 96, 8, 0.4);
+        let c = kernel_matrix(Kernel::Gaussian, &q, &k);
+        let norm_c = spectral_norm(&c);
+        let mut errs = Vec::new();
+        for &d in &[8usize, 32, 128] {
+            let mut avg = 0.0;
+            for s in 0..3 {
+                let mut rng = Rng::new(100 * d as u64 + s);
+                let approx =
+                    modified_nystrom(Kernel::Gaussian, &q, &k, d, Inverse::Exact { gamma: 1e-5 }, &mut rng);
+                avg += spectral_norm(&c.sub(&approx)) / norm_c;
+            }
+            errs.push(avg / 3.0);
+        }
+        assert!(
+            errs[2] < errs[0] * 0.6,
+            "no decay across landmark counts: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn ns_and_exact_inverse_agree_in_product() {
+        let (q, k) = qk(3, 48, 8, 0.5);
+        let landmarks: Vec<usize> = (0..32).collect();
+        let a = modified_nystrom_with_landmarks(
+            Kernel::Gaussian, &q, &k, &landmarks, Inverse::Exact { gamma: 1e-3 });
+        let b = modified_nystrom_with_landmarks(
+            Kernel::Gaussian, &q, &k, &landmarks, Inverse::NewtonSchulz { gamma: 1e-3, iters: 25 });
+        let rel = spectral_norm(&a.sub(&b)) / spectral_norm(&a).max(1e-20);
+        assert!(rel < 5e-3, "rel {rel}");
+    }
+
+    #[test]
+    fn apply_matches_materialised() {
+        let (q, k) = qk(4, 40, 8, 0.5);
+        let mut rng = Rng::new(9);
+        let v = Matrix::randn(&mut rng, 40, 16, 1.0);
+        let landmarks: Vec<usize> = (0..24).collect();
+        let inv = Inverse::NewtonSchulz { gamma: 1e-3, iters: 20 };
+        let direct = modified_nystrom_apply(Kernel::Gaussian, &q, &k, &v, &landmarks, inv);
+        let mat = modified_nystrom_with_landmarks(Kernel::Gaussian, &q, &k, &landmarks, inv)
+            .matmul(&v);
+        let err = direct.sub(&mat).max_abs();
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn softmax_kernel_lift_is_psd_spotcheck() {
+        // Lemma 1: SM is a PSD kernel — check x^T C x >= 0 for random x
+        let (q, k) = qk(5, 16, 6, 0.4);
+        let x = q.vcat(&k);
+        let c = kernel_matrix(Kernel::Softmax, &x, &x);
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let z: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+            let cz = c.matvec(&z);
+            let quad: f32 = z.iter().zip(&cz).map(|(a, b)| a * b).sum();
+            assert!(quad > -1e-3, "negative quadratic form {quad}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Empirical checks of Theorem 2's quantities: leverage scores, statistical
+//! dimension, and the lambda = eps ||C|| error bound.  Used by the
+//! `theorem2_bound` bench and the property tests.
+
+use crate::linalg::{solve, Matrix};
+
+/// Ridge leverage scores `l_i = [C_bar (C_bar + lambda I)^{-1}]_ii` and the
+/// statistical dimension `d_stat = sum_i l_i = Tr(C_bar (C_bar+lambda I)^{-1})`.
+pub struct LeverageProfile {
+    pub scores: Vec<f32>,
+    pub d_stat: f32,
+    pub lambda: f32,
+}
+
+/// Compute the profile for a PSD matrix `c_bar` at regularisation `lambda`.
+pub fn leverage_profile(c_bar: &Matrix, lambda: f32) -> LeverageProfile {
+    assert_eq!(c_bar.rows, c_bar.cols);
+    let n = c_bar.rows;
+    let reg = c_bar.add_diag(lambda);
+    let inv = solve::gauss_jordan_inverse(&reg)
+        .unwrap_or_else(|| solve::ns_inverse(c_bar, lambda, 30));
+    let prod = c_bar.matmul(&inv);
+    let scores: Vec<f32> = (0..n).map(|i| prod[(i, i)].clamp(0.0, 1.0)).collect();
+    let d_stat = scores.iter().sum();
+    LeverageProfile { scores, d_stat, lambda }
+}
+
+/// Theorem 2's coherence constant beta: the largest beta with
+/// `beta <= d_stat / (2n * l_i)` for all i — i.e.
+/// `beta = d_stat / (2n * max_i l_i)`.
+pub fn coherence_beta(profile: &LeverageProfile) -> f32 {
+    let max_l = profile
+        .scores
+        .iter()
+        .fold(0.0f32, |m, &l| m.max(l))
+        .max(1e-12);
+    profile.d_stat / (profile.scores.len() as f32 * max_l)
+}
+
+/// Theorem 2's sufficient landmark count `d >= C (d_stat / beta) log(n / delta)`
+/// with the lemma's C = 28/3 and delta = 0.1.
+pub fn sufficient_landmarks(profile: &LeverageProfile) -> usize {
+    let n = profile.scores.len() as f32;
+    let beta = coherence_beta(profile);
+    let c = 28.0 / 3.0;
+    (c * profile.d_stat / beta * (n / 0.1).ln()).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nystrom::{kernel_matrix, Kernel};
+    use crate::util::rng::Rng;
+
+    fn lifted(seed: u64, n: usize, p: usize, scale: f32) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let q = Matrix::randn(&mut rng, n, p, scale);
+        let k = Matrix::randn(&mut rng, n, p, scale);
+        let x = q.vcat(&k);
+        kernel_matrix(Kernel::Gaussian, &x, &x)
+    }
+
+    #[test]
+    fn leverage_scores_in_unit_interval_and_dstat_sane() {
+        let c_bar = lifted(0, 32, 8, 0.5);
+        let prof = leverage_profile(&c_bar, 0.1);
+        assert!(prof.scores.iter().all(|&l| (0.0..=1.0).contains(&l)));
+        // d_stat <= rank <= 2n, and > 0
+        assert!(prof.d_stat > 0.0 && prof.d_stat <= 64.0);
+    }
+
+    #[test]
+    fn dstat_decreases_with_lambda() {
+        let c_bar = lifted(1, 32, 8, 0.5);
+        let d1 = leverage_profile(&c_bar, 0.01).d_stat;
+        let d2 = leverage_profile(&c_bar, 0.1).d_stat;
+        let d3 = leverage_profile(&c_bar, 1.0).d_stat;
+        assert!(d1 > d2 && d2 > d3, "{d1} {d2} {d3}");
+    }
+
+    #[test]
+    fn beta_at_most_one() {
+        let c_bar = lifted(2, 24, 8, 0.5);
+        let prof = leverage_profile(&c_bar, 0.05);
+        let beta = coherence_beta(&prof);
+        assert!(beta > 0.0 && beta <= 1.0 + 1e-4, "beta {beta}");
+    }
+}

@@ -1,0 +1,2 @@
+//! Table/figure renderers: emit the same rows/series the paper prints.
+pub mod tables;

@@ -1,0 +1,127 @@
+//! Table rendering: aligned text tables (the same rows the paper prints)
+//! plus JSON export for EXPERIMENTS.md appendices.
+
+use crate::util::json::{self, Value};
+
+/// A simple aligned table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:<w$} |", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        let _ = ncol;
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("title", json::s(self.title.clone())),
+            (
+                "headers",
+                Value::Array(self.headers.iter().map(|h| json::s(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Value::Array(
+                    self.rows
+                        .iter()
+                        .map(|r| Value::Array(r.iter().map(|c| json::s(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Format seconds human-readably (s / min).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 120.0 {
+        format!("{s:.1}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+/// Format bytes as MB/GB.
+pub fn fmt_bytes(b: usize) -> String {
+    let mb = b as f64 / (1024.0 * 1024.0);
+    if mb < 1024.0 {
+        format!("{mb:.1}MB")
+    } else {
+        format!("{:.2}GB", mb / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["model", "acc"]);
+        t.row(vec!["skyformer".into(), "59.4".into()]);
+        t.row(vec!["sm".into(), "57.3".into()]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("| skyformer | 59.4 |"));
+        assert!(r.contains("| sm        | 57.3 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_secs(30.0), "30.0s");
+        assert_eq!(fmt_secs(300.0), "5.0min");
+        assert_eq!(fmt_bytes(10 * 1024 * 1024), "10.0MB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.00GB");
+    }
+}

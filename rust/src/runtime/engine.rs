@@ -1,0 +1,228 @@
+//! PJRT engine: compile-once executable cache + typed execution.
+//!
+//! `Engine` owns the PJRT CPU client and a cache of compiled executables
+//! keyed by artifact name; `Executable::run` validates input tensors
+//! against the manifest signature, converts to literals, executes, and
+//! unpacks the output tuple.
+//!
+//! Perf note (§Perf L3): inputs are passed as `Literal`s, which PJRT
+//! copies to device buffers internally.  On the CPU client this copy is
+//! the dominant coordinator-side cost for large batches; `run_buffers`
+//! keeps state device-resident between steps (`execute_b`) so the training
+//! loop only uploads the small per-step tensors (tokens/labels/seed/lr).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative execute statistics (perf accounting)
+    pub stats: RefCell<ExecStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: usize,
+    pub exec_seconds: f64,
+    pub upload_seconds: f64,
+    pub download_seconds: f64,
+}
+
+impl Executable {
+    /// Validate inputs against the manifest signature.
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Artifact {
+                name: self.spec.name.clone(),
+                message: format!(
+                    "expected {} inputs, got {}",
+                    self.spec.inputs.len(),
+                    inputs.len()
+                ),
+            });
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                return Err(Error::Shape {
+                    expected: format!("{}: {:?} {}", s.name, s.shape, s.dtype.name()),
+                    got: format!("{:?} {}", t.shape(), t.dtype().name()),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns host tensors (the output tuple,
+    /// flattened in manifest order).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let mut stats = self.stats.borrow_mut();
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        stats.upload_seconds += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        stats.exec_seconds += t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let out = Self::unpack(&self.spec, &result)?;
+        stats.download_seconds += t2.elapsed().as_secs_f64();
+        stats.calls += 1;
+        Ok(out)
+    }
+
+    /// Execute with device-resident buffers (state stays on device).
+    /// `host_inputs` are uploaded fresh; positions come from `host_index`.
+    pub fn run_buffers(
+        &self,
+        buffers: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut stats = self.stats.borrow_mut();
+        let t1 = Instant::now();
+        let mut result = self.exe.execute_b::<xla::PjRtBuffer>(buffers)?;
+        stats.exec_seconds += t1.elapsed().as_secs_f64();
+        stats.calls += 1;
+        // single-device: one replica, whose outputs are the tuple elements
+        if result.len() != 1 {
+            return Err(Error::Artifact {
+                name: self.spec.name.clone(),
+                message: format!("expected 1 replica, got {}", result.len()),
+            });
+        }
+        Ok(result.remove(0))
+    }
+
+    fn unpack(spec: &ArtifactSpec, result: &[Vec<xla::PjRtBuffer>]) -> Result<Vec<Tensor>> {
+        let buffers = result
+            .first()
+            .ok_or_else(|| Error::Artifact {
+                name: spec.name.clone(),
+                message: "empty result".into(),
+            })?;
+        let mut out = Vec::with_capacity(spec.outputs.len());
+        if buffers.len() == 1 && spec.outputs.len() > 1 {
+            // return_tuple=True lowers everything into a single tuple buffer
+            let lit = buffers[0].to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            if parts.len() != spec.outputs.len() {
+                return Err(Error::Artifact {
+                    name: spec.name.clone(),
+                    message: format!(
+                        "tuple arity {} != manifest outputs {}",
+                        parts.len(),
+                        spec.outputs.len()
+                    ),
+                });
+            }
+            for p in &parts {
+                out.push(Tensor::from_literal(p)?);
+            }
+        } else {
+            for b in buffers {
+                let lit = b.to_literal_sync()?;
+                // a 1-output artifact may still be a 1-tuple
+                match lit.shape()? {
+                    xla::Shape::Tuple(_) => {
+                        for p in lit.to_tuple()? {
+                            out.push(Tensor::from_literal(&p)?);
+                        }
+                    }
+                    _ => out.push(Tensor::from_literal(&lit)?),
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a host tensor to a device buffer.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            Tensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<f32>(data, shape, None)?
+            }
+            Tensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<i32>(data, shape, None)?
+            }
+            Tensor::U32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<u32>(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Download a device buffer to a host tensor.
+    pub fn download(&self, b: &xla::PjRtBuffer) -> Result<Tensor> {
+        let lit = b.to_literal_sync()?;
+        Tensor::from_literal(&lit)
+    }
+
+    /// Load + compile (cached) the artifact for (task, attention, kind).
+    pub fn load(
+        &self,
+        task: &str,
+        attention: &str,
+        kind: &str,
+        pallas: bool,
+    ) -> Result<Rc<Executable>> {
+        let spec = self.manifest.find(task, attention, kind, pallas)?.clone();
+        self.load_spec(spec)
+    }
+
+    /// Load + compile (cached) by explicit spec.
+    pub fn load_spec(&self, spec: ArtifactSpec) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(&spec.name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path_of(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = Rc::new(Executable {
+            spec: spec.clone(),
+            exe,
+            stats: RefCell::new(ExecStats::default()),
+        });
+        self.cache
+            .borrow_mut()
+            .insert(spec.name, executable.clone());
+        Ok(executable)
+    }
+}

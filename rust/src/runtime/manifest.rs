@@ -1,0 +1,272 @@
+//! Typed view of `artifacts/manifest.json` — the contract between
+//! `python/compile/aot.py` (which writes it) and the coordinator (which
+//! feeds executables positionally and checkpoints parameters by name).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::tensor::DType;
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// One named tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let name = v.expect("name")?.as_str().unwrap_or_default().to_string();
+        let shape = v
+            .expect("shape")?
+            .as_array()
+            .ok_or_else(|| Error::Manifest("shape not an array".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Manifest("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            v.expect("dtype")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("dtype not a string".into()))?,
+        )?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// LRA task shape parameters (mirrors python `configs.TaskConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskConfig {
+    pub name: String,
+    pub seq_len: usize,
+    pub vocab_size: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub dual: bool,
+}
+
+/// Model/attention settings (mirrors python `configs.ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub attention: String,
+    pub emb_dim: usize,
+    pub ffn_dim: usize,
+    pub num_heads: usize,
+    pub num_layers: usize,
+    pub num_features: usize,
+    pub ns_iters: usize,
+    pub pallas: bool,
+}
+
+/// One lowered step function.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // init | train | eval | embed
+    pub task: String,
+    pub attention: String,
+    pub pallas: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub num_params: usize,
+    pub num_opt: usize,
+    pub task_config: TaskConfig,
+    pub model_config: ModelConfig,
+}
+
+impl ArtifactSpec {
+    /// Number of leading state tensors (params + optimizer) in the
+    /// train-step signature.
+    pub fn num_state(&self) -> usize {
+        self.num_params + self.num_opt
+    }
+
+    /// Total bytes of one set of inputs — the "peak memory" proxy Table 2
+    /// reports per model.
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|s| s.num_elements() * 4).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let root = json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .expect("artifacts")?
+            .as_object()
+            .ok_or_else(|| Error::Manifest("artifacts not an object".into()))?;
+        for (name, v) in arts {
+            artifacts.insert(name.clone(), Self::artifact_from_json(name, v)?);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    fn artifact_from_json(name: &str, v: &Value) -> Result<ArtifactSpec> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.expect(key)?
+                .as_array()
+                .ok_or_else(|| Error::Manifest(format!("{key} not an array")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let tc = v.expect("task_config")?;
+        let mc = v.expect("model_config")?;
+        let get_str = |val: &Value, key: &str| -> Result<String> {
+            Ok(val.expect(key)?.as_str().unwrap_or_default().to_string())
+        };
+        let get_usize = |val: &Value, key: &str| -> Result<usize> {
+            val.expect(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest(format!("{key} not a number")))
+        };
+        Ok(ArtifactSpec {
+            name: name.to_string(),
+            file: get_str(v, "file")?,
+            kind: get_str(v, "kind")?,
+            task: get_str(v, "task")?,
+            attention: get_str(v, "attention")?,
+            pallas: v.get("pallas").and_then(|b| b.as_bool()).unwrap_or(false),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            num_params: get_usize(v, "num_params")?,
+            num_opt: get_usize(v, "num_opt")?,
+            task_config: TaskConfig {
+                name: get_str(tc, "name")?,
+                seq_len: get_usize(tc, "seq_len")?,
+                vocab_size: get_usize(tc, "vocab_size")?,
+                num_classes: get_usize(tc, "num_classes")?,
+                batch_size: get_usize(tc, "batch_size")?,
+                dual: tc.get("dual").and_then(|b| b.as_bool()).unwrap_or(false),
+            },
+            model_config: ModelConfig {
+                attention: get_str(mc, "attention")?,
+                emb_dim: get_usize(mc, "emb_dim")?,
+                ffn_dim: get_usize(mc, "ffn_dim")?,
+                num_heads: get_usize(mc, "num_heads")?,
+                num_layers: get_usize(mc, "num_layers")?,
+                num_features: get_usize(mc, "num_features")?,
+                ns_iters: get_usize(mc, "ns_iters")?,
+                pallas: mc.get("pallas").and_then(|b| b.as_bool()).unwrap_or(false),
+            },
+        })
+    }
+
+    /// Look up the artifact for a (task, attention, kind) triple.
+    pub fn find(&self, task: &str, attention: &str, kind: &str, pallas: bool) -> Result<&ArtifactSpec> {
+        let stem = if pallas {
+            format!("{task}_{attention}_pallas.{kind}")
+        } else {
+            format!("{task}_{attention}.{kind}")
+        };
+        self.artifacts.get(&stem).ok_or_else(|| {
+            Error::Manifest(format!(
+                "artifact {stem} not built; run `make artifacts` (or aot.py --tasks {task} --attentions {attention})"
+            ))
+        })
+    }
+
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// All (task, attention) pairs with a complete train/eval/init triple.
+    pub fn trainable_configs(&self) -> Vec<(String, String, bool)> {
+        let mut out = Vec::new();
+        for spec in self.artifacts.values() {
+            if spec.kind == "train" {
+                let has = |kind: &str| {
+                    self.find(&spec.task, &spec.attention, kind, spec.pallas).is_ok()
+                };
+                if has("init") && has("eval") {
+                    out.push((spec.task.clone(), spec.attention.clone(), spec.pallas));
+                }
+            }
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> &'static str {
+        r#"{
+          "artifacts": {
+            "listops_skyformer.train": {
+              "name": "listops_skyformer.train",
+              "file": "listops_skyformer.train.hlo.txt",
+              "kind": "train",
+              "task": "listops",
+              "attention": "skyformer",
+              "pallas": false,
+              "inputs": [
+                {"name": "params['embed']", "shape": [20, 64], "dtype": "f32"},
+                {"name": "tokens", "shape": [32, 256], "dtype": "i32"}
+              ],
+              "outputs": [
+                {"name": "params['embed']", "shape": [20, 64], "dtype": "f32"},
+                {"name": "loss", "shape": [], "dtype": "f32"}
+              ],
+              "num_params": 1,
+              "num_opt": 0,
+              "task_config": {"name": "listops", "seq_len": 256, "vocab_size": 20,
+                              "num_classes": 10, "batch_size": 32, "dual": false},
+              "model_config": {"attention": "skyformer", "emb_dim": 64, "ffn_dim": 128,
+                               "num_heads": 2, "num_layers": 2, "num_features": 128,
+                               "ns_iters": 6, "gamma": 0.001, "block_size": 32,
+                               "pallas": false}
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("skyformer_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.find("listops", "skyformer", "train", false).unwrap();
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].shape, vec![20, 64]);
+        assert_eq!(spec.inputs[0].dtype, DType::F32);
+        assert_eq!(spec.task_config.seq_len, 256);
+        assert_eq!(spec.model_config.num_features, 128);
+        assert_eq!(spec.input_bytes(), 20 * 64 * 4 + 32 * 256 * 4);
+        assert!(m.find("listops", "skyformer", "eval", false).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

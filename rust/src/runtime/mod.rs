@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only bridge between the rust coordinator and the
+//! python-authored compute graphs.  Interchange is HLO **text** (see
+//! `python/compile/aot.py` and DESIGN.md §2): `HloModuleProto::from_text_file`
+//! reassigns instruction ids, sidestepping the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects.
+//!
+//! * [`tensor`] — host-side tensors (f32/i32/u32) ⇄ `xla::Literal`
+//! * [`manifest`] — typed view of `artifacts/manifest.json`
+//! * [`engine`] — PJRT client + compiled-executable cache + typed `run`
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use tensor::{DType, Tensor};

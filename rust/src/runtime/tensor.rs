@@ -1,0 +1,233 @@
+//! Host tensors and conversion to/from `xla::Literal`.
+//!
+//! The coordinator's state (parameters, optimizer moments, batches) lives
+//! in these; the engine converts at the execute boundary.  Only the three
+//! dtypes the artifacts use (f32 / i32 / u32) are supported — the manifest
+//! guarantees nothing else appears.
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(name: &str) -> Result<DType> {
+        match name {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            other => Err(Error::Manifest(format!("unsupported dtype {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// A host tensor: shape + typed storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl Tensor {
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::U32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::F32 { shape, data: vec![0.0; n] },
+            DType::I32 => Tensor::I32 { shape, data: vec![0; n] },
+            DType::U32 => Tensor::U32 { shape, data: vec![0; n] },
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::U32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            other => Err(Error::Shape {
+                expected: "f32".into(),
+                got: other.dtype().name().into(),
+            }),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            other => Err(Error::Shape {
+                expected: "f32".into(),
+                got: other.dtype().name().into(),
+            }),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            other => Err(Error::Shape {
+                expected: "i32".into(),
+                got: other.dtype().name().into(),
+            }),
+        }
+    }
+
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(Error::Shape {
+                expected: "scalar".into(),
+                got: format!("{:?}", self.shape()),
+            });
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an `xla::Literal` (host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
+            Tensor::F32 { data, .. } => (xla::ElementType::F32, bytemuck_cast(data)),
+            Tensor::I32 { data, .. } => (xla::ElementType::S32, bytemuck_cast(data)),
+            Tensor::U32 { data, .. } => (xla::ElementType::U32, bytemuck_cast(data)),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty,
+            self.shape(),
+            bytes,
+        )?)
+    }
+
+    /// Convert from an `xla::Literal` (host copy).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            xla::ElementType::U32 => Ok(Tensor::U32 {
+                shape: dims,
+                data: lit.to_vec::<u32>()?,
+            }),
+            other => Err(Error::Other(format!("unsupported literal type {other:?}"))),
+        }
+    }
+}
+
+/// Reinterpret a 4-byte-element slice as bytes (little-endian host layout,
+/// which is what PJRT CPU expects).
+fn bytemuck_cast<T>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_len() {
+        let t = Tensor::from_f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    fn scalar_roundtrip_value() {
+        let t = Tensor::scalar_f32(3.25);
+        assert_eq!(t.scalar_value_f32().unwrap(), 3.25);
+        assert!(Tensor::from_f32(vec![2], vec![1.0, 2.0])
+            .scalar_value_f32()
+            .is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::scalar_u32(1);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        // requires the PJRT shared lib to be loadable; literal ops are host-only
+        let t = Tensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+
+        let ti = Tensor::from_i32(vec![3], vec![-1, 0, 7]);
+        let back = Tensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+        assert_eq!(ti, back);
+
+        let tu = Tensor::scalar_u32(42);
+        let back = Tensor::from_literal(&tu.to_literal().unwrap()).unwrap();
+        assert_eq!(tu, back);
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI-argument helper (clap is unavailable offline).
+//!
+//! Flags are `--name value` or `--name=value`; boolean flags are bare
+//! `--name`.  Positional args are whatever remains, in order.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a float, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["train", "--task", "listops", "--steps=100", "--verbose", "--lr", "1e-4"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("task"), Some("listops"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.get_bool("verbose"));
+        assert!((a.get_f32("lr", 0.0).unwrap() - 1e-4).abs() < 1e-10);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("task", "listops"), "listops");
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--attn", "softmax, skyformer,performer"]);
+        assert_eq!(
+            a.get_list("attn").unwrap(),
+            vec!["softmax", "skyformer", "performer"]
+        );
+    }
+}

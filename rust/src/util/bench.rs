@@ -1,0 +1,87 @@
+//! Micro-benchmark timer (criterion is unavailable offline).
+//!
+//! Warms up, runs timed iterations until a wall budget or iteration cap,
+//! reports mean / p50 / p95 / min.  Used by every `rust/benches/*.rs`
+//! harness (`cargo bench` with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>6} iters  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Benchmark `f`, spending roughly `budget` wall time after 2 warmup calls.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Stats {
+    f();
+    f(); // warmup
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    Stats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        min: samples[0],
+    }
+}
+
+/// One-shot timing of a closure returning a value.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_sane_stats() {
+        let s = bench("noop", Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

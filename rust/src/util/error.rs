@@ -1,0 +1,41 @@
+//! Crate-wide error type.
+//!
+//! Wraps xla/PJRT failures, artifact/manifest problems and IO so the
+//! coordinator can surface one uniform `Result`.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla/pjrt: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    #[error("artifact {name}: {message}")]
+    Artifact { name: String, message: String },
+
+    #[error("shape mismatch: expected {expected}, got {got}")]
+    Shape { expected: String, got: String },
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates the offline environment forced us to build:
+//! a JSON parser/writer ([`json`]), a splittable PRNG ([`rng`]), a tiny
+//! CLI-argument helper ([`args`]), error plumbing ([`error`]), and a
+//! micro-benchmark timer ([`bench`]) standing in for criterion.
+
+pub mod args;
+pub mod bench;
+pub mod error;
+pub mod json;
+pub mod rng;

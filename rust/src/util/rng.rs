@@ -1,0 +1,200 @@
+//! Deterministic splittable PRNG for workload generation and seed sweeps.
+//!
+//! SplitMix64 core with a `split(label)` operation, so every table row in
+//! the benchmark harness is reproducible from the CLI seed alone
+//! (DESIGN.md §6).  Not cryptographic — statistical quality only.
+
+/// Splittable SplitMix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avalanche the seed so small seeds don't correlate
+        Rng {
+            state: seed ^ 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    /// Derive an independent stream labelled by `label` without advancing
+    /// this stream.
+    pub fn split(&self, label: u64) -> Rng {
+        let mut mixed = self.state ^ label.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        mixed = splitmix(&mut mixed);
+        Rng { state: mixed }
+    }
+
+    /// Derive a stream from a string label (stable across runs).
+    pub fn split_str(&self, label: &str) -> Rng {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        self.split(h)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        splitmix(&mut self.state)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire-style rejection-free for our (non-crypto) needs
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from [0, n) (k <= n), uniform without replacement.
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // partial Fisher–Yates over a lazily materialised permutation
+        let mut map = std::collections::HashMap::new();
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            let vi = *map.get(&i).unwrap_or(&i);
+            let vj = *map.get(&j).unwrap_or(&j);
+            map.insert(j, vi);
+            out.push(vj);
+        }
+        out
+    }
+
+    /// Sample from a categorical distribution given cumulative weights.
+    pub fn categorical(&mut self, cumulative: &[f32]) -> usize {
+        let total = *cumulative.last().expect("empty categorical");
+        let x = self.uniform() * total;
+        match cumulative.binary_search_by(|w| w.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cumulative.len() - 1),
+            Err(i) => i.min(cumulative.len() - 1),
+        }
+    }
+}
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_independent_of_parent_advance() {
+        let parent = Rng::new(7);
+        let c1 = parent.split(1);
+        let mut parent2 = parent.clone();
+        parent2.next_u64();
+        // split derives from state snapshot, not consumption order
+        let c1b = parent.split(1);
+        let mut x = c1.clone();
+        let mut y = c1b.clone();
+        assert_eq!(x.next_u64(), y.next_u64());
+        let mut c2 = parent.split(2);
+        assert_ne!(x.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn choose_distinct_is_distinct_and_in_range() {
+        let mut r = Rng::new(5);
+        for _ in 0..50 {
+            let v = r.choose_distinct(100, 30);
+            let set: std::collections::HashSet<_> = v.iter().collect();
+            assert_eq!(set.len(), 30);
+            assert!(v.iter().all(|&x| x < 100));
+        }
+    }
+
+    #[test]
+    fn choose_distinct_full_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v = r.choose_distinct(20, 20);
+        v.sort_unstable();
+        assert_eq!(v, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(1);
+        let mut seen0 = false;
+        let mut seen_max = false;
+        for _ in 0..10_000 {
+            let x = r.below(7);
+            assert!(x < 7);
+            seen0 |= x == 0;
+            seen_max |= x == 6;
+        }
+        assert!(seen0 && seen_max);
+    }
+}

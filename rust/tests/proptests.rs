@@ -1,0 +1,275 @@
+//! Property-based tests over coordinator/substrate invariants.
+//!
+//! proptest is unavailable offline, so this file carries a minimal
+//! deterministic property harness: each property runs over a sweep of
+//! RNG-derived cases and reports the failing case seed.
+
+use skyformer::data::batch::{Dataset, Split};
+use skyformer::linalg::{norms, solve, svd, Matrix};
+use skyformer::nystrom::{self, Inverse, Kernel};
+use skyformer::runtime::manifest::TaskConfig;
+use skyformer::util::json;
+use skyformer::util::rng::Rng;
+
+/// Run `prop` over `cases` seeds; panic with the seed on first failure.
+fn forall(cases: u64, prop: impl Fn(&mut Rng) -> std::result::Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case seed {seed}: {msg}");
+        }
+    }
+}
+
+fn check(cond: bool, msg: impl Fn() -> String) -> std::result::Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+// ---------------------------------------------------------------- linalg
+
+#[test]
+fn prop_matmul_associative() {
+    forall(20, |rng| {
+        let (m, k, n, o) = (
+            1 + rng.below(20),
+            1 + rng.below(20),
+            1 + rng.below(20),
+            1 + rng.below(10),
+        );
+        let a = Matrix::randn(rng, m, k, 1.0);
+        let b = Matrix::randn(rng, k, n, 1.0);
+        let c = Matrix::randn(rng, n, o, 1.0);
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        let scale = left.max_abs().max(1.0);
+        check(
+            left.sub(&right).max_abs() / scale < 1e-3,
+            || format!("associativity broke at {m}x{k}x{n}x{o}"),
+        )
+    });
+}
+
+#[test]
+fn prop_spectral_norm_submultiplicative() {
+    forall(15, |rng| {
+        let (m, k, n) = (2 + rng.below(15), 2 + rng.below(15), 2 + rng.below(15));
+        let a = Matrix::randn(rng, m, k, 1.0);
+        let b = Matrix::randn(rng, k, n, 1.0);
+        let na = norms::spectral_norm(&a);
+        let nb = norms::spectral_norm(&b);
+        let nab = norms::spectral_norm(&a.matmul(&b));
+        check(nab <= na * nb * 1.01, || {
+            format!("||AB||={nab} > ||A||*||B||={}", na * nb)
+        })
+    });
+}
+
+#[test]
+fn prop_svd_largest_matches_power_iteration() {
+    forall(10, |rng| {
+        let (m, n) = (3 + rng.below(20), 3 + rng.below(12));
+        let a = Matrix::randn(rng, m, n, 1.0);
+        let sv = svd::singular_values(&a);
+        let sn = norms::spectral_norm(&a);
+        check((sv[0] - sn).abs() < 2e-2 * sn.max(1e-6), || {
+            format!("{} vs {}", sv[0], sn)
+        })
+    });
+}
+
+#[test]
+fn prop_gauss_jordan_left_and_right_inverse() {
+    forall(10, |rng| {
+        let n = 2 + rng.below(20);
+        let x = Matrix::randn(rng, n, n, 1.0);
+        let m = x.matmul(&x.transpose()).add_diag(0.5); // well-conditioned PSD
+        let inv = solve::gauss_jordan_inverse(&m).ok_or("singular")?;
+        let eye = Matrix::eye(n);
+        let e1 = m.matmul(&inv).sub(&eye).max_abs();
+        let e2 = inv.matmul(&m).sub(&eye).max_abs();
+        check(e1 < 1e-2 && e2 < 1e-2, || format!("inverse errors {e1} {e2}"))
+    });
+}
+
+// ---------------------------------------------------------------- nystrom
+
+#[test]
+fn prop_lemma3_unit_spectrum_for_kernel_grams() {
+    forall(12, |rng| {
+        let n = 4 + rng.below(28);
+        let p = 2 + rng.below(12);
+        let scale = 0.3 + rng.uniform();
+        let x = Matrix::randn(rng, n, p, scale);
+        let gram = nystrom::kernel_matrix(Kernel::Gaussian, &x, &x);
+        let (m_hat, _) = solve::ns_preconditioner(&gram, 1e-3);
+        let resid = norms::spectral_norm(&Matrix::eye(n).sub(&m_hat));
+        check(resid < 1.0 + 1e-4, || format!("||I - m_hat|| = {resid}"))
+    });
+}
+
+#[test]
+fn prop_nystrom_error_bounded_by_identity_at_full_rank() {
+    forall(8, |rng| {
+        // exactness at full rank holds in exact arithmetic; in f32 the
+        // lifted Gram must stay reasonably conditioned, so keep the point
+        // count modest relative to the ambient dimension.
+        let n = 4 + rng.below(8);
+        let p = 6 + rng.below(6);
+        let q = Matrix::randn(rng, n, p, 0.5);
+        let k = Matrix::randn(rng, n, p, 0.5);
+        let c = nystrom::kernel_matrix(Kernel::Gaussian, &q, &k);
+        let landmarks: Vec<usize> = (0..2 * n).collect();
+        let approx = nystrom::modified_nystrom_with_landmarks(
+            Kernel::Gaussian,
+            &q,
+            &k,
+            &landmarks,
+            Inverse::Exact { gamma: 1e-6 },
+        );
+        let rel = norms::spectral_norm(&c.sub(&approx)) / norms::spectral_norm(&c).max(1e-20);
+        check(rel < 5e-2, || format!("full-rank rel err {rel}"))
+    });
+}
+
+#[test]
+fn prop_nystrom_loewner_residual_psd() {
+    // Theorem 2 first part: C_bar - C_bar_tilde is PSD (residual of a
+    // projection) — check x^T (C - C~) x >= 0 on the lifted matrix.
+    forall(8, |rng| {
+        let n = 3 + rng.below(10);
+        let p = 2 + rng.below(6);
+        let q = Matrix::randn(rng, n, p, 0.5);
+        let k = Matrix::randn(rng, n, p, 0.5);
+        let x = q.vcat(&k);
+        let cbar = nystrom::kernel_matrix(Kernel::Gaussian, &x, &x);
+        let d = 2 + rng.below(n);
+        let lm_idx = rng.choose_distinct(2 * n, d);
+        let cs = cbar.take_rows(&lm_idx).transpose(); // (2n, d) columns
+        let gram = Matrix::from_fn(d, d, |i, j| cbar[(lm_idx[i], lm_idx[j])]);
+        let inv = solve::gauss_jordan_inverse(&gram.add_diag(1e-5)).ok_or("singular")?;
+        let tilde = cs.matmul(&inv).matmul(&cs.transpose());
+        let resid = cbar.sub(&tilde);
+        for _ in 0..10 {
+            let z: Vec<f32> = (0..2 * n).map(|_| rng.normal()).collect();
+            let rz = resid.matvec(&z);
+            let quad: f32 = z.iter().zip(&rz).map(|(a, b)| a * b).sum();
+            check(quad > -1e-2 * cbar.max_abs(), || {
+                format!("residual not PSD: x^T R x = {quad}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------ data
+
+fn tc(name: &str, seq: usize, vocab: usize, classes: usize, dual: bool, batch: usize) -> TaskConfig {
+    TaskConfig {
+        name: name.into(),
+        seq_len: seq,
+        vocab_size: vocab,
+        num_classes: classes,
+        batch_size: batch,
+        dual,
+    }
+}
+
+#[test]
+fn prop_batches_deterministic_across_dataset_instances() {
+    forall(6, |rng| {
+        let seed = rng.next_u64();
+        let t = tc("listops", 64, 20, 10, false, 3);
+        let d1 = Dataset::for_task(&t, seed).map_err(|e| e.to_string())?;
+        let d2 = Dataset::for_task(&t, seed).map_err(|e| e.to_string())?;
+        for i in 0..3 {
+            let a = d1.batch(Split::Train, i);
+            let b = d2.batch(Split::Train, i);
+            check(a.tokens == b.tokens && a.labels == b.labels, || {
+                format!("batch {i} differs for seed {seed}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_different_dataset_seeds_give_different_data() {
+    forall(6, |rng| {
+        let s1 = rng.next_u64();
+        let s2 = s1 ^ 0xABCD;
+        let t = tc("text", 64, 256, 2, false, 4);
+        let d1 = Dataset::for_task(&t, s1).map_err(|e| e.to_string())?;
+        let d2 = Dataset::for_task(&t, s2).map_err(|e| e.to_string())?;
+        let a = d1.batch(Split::Train, 0);
+        let b = d2.batch(Split::Train, 0);
+        check(a.tokens != b.tokens, || "seeds collide".into())
+    });
+}
+
+#[test]
+fn prop_listops_tokens_always_parse_to_label() {
+    forall(40, |rng| {
+        let t = tc("listops", 96, 20, 10, false, 1);
+        let seed = rng.next_u64();
+        let d = Dataset::for_task(&t, seed).map_err(|e| e.to_string())?;
+        let b = d.batch(Split::Train, 0);
+        let toks = b.tokens.as_i32().map_err(|e| e.to_string())?;
+        let label = b.labels.as_i32().map_err(|e| e.to_string())?[0];
+        let parsed = skyformer::data::listops::interpret_tokens(toks)
+            .ok_or("tokens do not parse")?;
+        check(parsed == label, || format!("label {label} != parsed {parsed}"))
+    });
+}
+
+// ------------------------------------------------------------------ util
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    forall(30, |rng| {
+        // build a random JSON value, serialise, reparse, compare
+        fn random_value(rng: &mut Rng, depth: usize) -> json::Value {
+            if depth > 2 {
+                return json::num((rng.below(100) as f64) / 7.0);
+            }
+            match rng.below(5) {
+                0 => json::Value::Null,
+                1 => json::Value::Bool(rng.below(2) == 0),
+                2 => json::num(rng.normal() as f64 * 1e3),
+                3 => json::s(format!("s{}-\"quoted\"\n", rng.below(1000))),
+                _ => json::Value::Array(
+                    (0..rng.below(4)).map(|_| random_value(rng, depth + 1)).collect(),
+                ),
+            }
+        }
+        let v = json::obj(vec![
+            ("a", random_value(rng, 0)),
+            ("b", random_value(rng, 0)),
+        ]);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).map_err(|e| e.to_string())?;
+        // floats may lose ulps through the f64 formatter; compare re-serialised
+        check(json::to_string(&back) == text, || format!("roundtrip broke: {text}"))
+    });
+}
+
+#[test]
+fn prop_rng_split_streams_uncorrelated() {
+    forall(10, |rng| {
+        let base = Rng::new(rng.next_u64());
+        let mut a = base.split(1);
+        let mut b = base.split(2);
+        let n = 2_000;
+        let mut matches = 0;
+        for _ in 0..n {
+            if (a.uniform() < 0.5) == (b.uniform() < 0.5) {
+                matches += 1;
+            }
+        }
+        let rate = matches as f64 / n as f64;
+        check((0.44..0.56).contains(&rate), || format!("correlation {rate}"))
+    });
+}
