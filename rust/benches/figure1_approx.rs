@@ -13,6 +13,7 @@ use skyformer::util::bench::time_once;
 use skyformer::util::rng::Rng;
 
 fn main() {
+    skyformer::obs::init_from_env();
     let features = [16usize, 32, 64, 128, 256];
     let lengths = [256usize, 512];
     let trials = 3u64;
@@ -58,5 +59,10 @@ fn main() {
             println!("{}", err_t.render());
             println!("{}", time_t.render());
         }
+    }
+    match skyformer::obs::finish(None) {
+        Ok(paths) if !paths.is_empty() => eprintln!("obs: wrote {}", paths.join(", ")),
+        Ok(_) => {}
+        Err(e) => eprintln!("obs: dump failed: {e}"),
     }
 }

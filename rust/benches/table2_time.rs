@@ -5,31 +5,79 @@
 //! step and how cost scales with sequence length (absolute hours are
 //! testbed-specific; DESIGN.md §5).  Run via `cargo bench --bench
 //! table2_time` (custom harness — criterion is unavailable offline).
+//!
+//! Always emits a `BENCH_table2.json` artifact (override with `--out`)
+//! carrying the measured rows plus the obs metrics snapshot, so CI can
+//! diff bench runs; without `--features pjrt` the rows are empty but the
+//! artifact is still written.  `--obs-out PREFIX` additionally dumps the
+//! full trace/metrics fileset.
 
-use std::time::Duration;
-
-use skyformer::coordinator::trainer::{TrainConfig, Trainer};
-use skyformer::report::tables::{fmt_bytes, Table};
-use skyformer::runtime::engine::Engine;
+use skyformer::util::args::Args;
+use skyformer::util::json::{self, Value};
 
 fn main() {
+    let args = Args::from_env();
+    let obs_out = skyformer::obs::init_from_env()
+        .or_else(|| args.get("obs-out").map(|s| s.to_string()));
+    if obs_out.is_some() {
+        skyformer::obs::set_enabled(true);
+    }
+
+    let rows = run_rows();
+    if rows.is_empty() {
+        eprintln!("table2_time: no measurements (missing pjrt feature or artifacts)");
+    }
+
+    let artifact = json::obj(vec![
+        ("bench", json::s("table2_time")),
+        ("rows", Value::Array(rows)),
+        ("metrics", skyformer::obs::snapshot().to_json()),
+    ]);
+    let out_path = args.get_or("out", "BENCH_table2.json").to_string();
+    match std::fs::write(&out_path, json::to_string(&artifact)) {
+        Ok(()) => println!("bench artifact written to {out_path}"),
+        Err(e) => eprintln!("table2_time: cannot write {out_path}: {e}"),
+    }
+
+    if let Some(prefix) = obs_out {
+        match skyformer::obs::dump(&prefix) {
+            Ok(paths) => eprintln!("obs: wrote {}", paths.join(", ")),
+            Err(e) => eprintln!("obs: dump failed: {e}"),
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_rows() -> Vec<Value> {
+    Vec::new()
+}
+
+#[cfg(feature = "pjrt")]
+fn run_rows() -> Vec<Value> {
+    use std::time::Duration;
+
+    use skyformer::coordinator::trainer::{TrainConfig, Trainer};
+    use skyformer::report::tables::{fmt_bytes, Table};
+    use skyformer::runtime::engine::Engine;
+
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = match Engine::new(&dir) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("table2_time: skipped ({e})");
-            return;
+            return Vec::new();
         }
     };
     let configs = engine.manifest().trainable_configs();
     if configs.is_empty() {
         eprintln!("table2_time: no trainable artifacts built");
-        return;
+        return Vec::new();
     }
     let mut t = Table::new(
         "Table 2 (bench): per-step time / peak tensor bytes",
         &["task", "model", "mean ms/step", "p95 ms", "peak mem", "n"],
     );
+    let mut rows = Vec::new();
     for (task, attn, pallas) in configs {
         if pallas {
             continue; // interpret-mode pallas timing is not a perf claim
@@ -63,6 +111,17 @@ fn main() {
             fmt_bytes(trainer.metrics.peak_bytes),
             stats.iters.to_string(),
         ]);
+        let mut row = stats.to_json();
+        if let Value::Object(map) = &mut row {
+            map.insert("task".into(), json::s(task.clone()));
+            map.insert("attention".into(), json::s(attn.clone()));
+            map.insert(
+                "peak_bytes".into(),
+                json::num(trainer.metrics.peak_bytes as f64),
+            );
+        }
+        rows.push(row);
     }
     println!("\n{}", t.render());
+    rows
 }

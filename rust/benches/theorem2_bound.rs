@@ -12,6 +12,7 @@ use skyformer::report::tables::Table;
 use skyformer::util::rng::Rng;
 
 fn main() {
+    skyformer::obs::init_from_env();
     let n = 128usize;
     let p = 16usize;
     let mut rng = Rng::new(7);
@@ -79,4 +80,9 @@ fn main() {
         ]);
     }
     println!("{}", t2.render());
+    match skyformer::obs::finish(None) {
+        Ok(paths) if !paths.is_empty() => eprintln!("obs: wrote {}", paths.join(", ")),
+        Ok(_) => {}
+        Err(e) => eprintln!("obs: dump failed: {e}"),
+    }
 }

@@ -21,6 +21,10 @@ use skyformer::util::rng::Rng;
 
 fn main() -> skyformer::Result<()> {
     let args = Args::from_env();
+    skyformer::obs::init_from_env();
+    if args.get("obs-out").is_some() {
+        skyformer::obs::set_enabled(true);
+    }
     let lengths: Vec<usize> = args
         .get_list("n")
         .unwrap_or_else(|| vec!["256".into(), "512".into()])
@@ -95,6 +99,11 @@ fn main() -> skyformer::Result<()> {
             t2.row(cells);
             println!("{}", t2.render());
         }
+    }
+    match skyformer::obs::finish(args.get("obs-out")) {
+        Ok(paths) if !paths.is_empty() => eprintln!("obs: wrote {}", paths.join(", ")),
+        Ok(_) => {}
+        Err(e) => eprintln!("obs: dump failed: {e}"),
     }
     Ok(())
 }

@@ -15,6 +15,10 @@ use skyformer::util::args::Args;
 
 fn main() -> skyformer::Result<()> {
     let args = Args::from_env();
+    skyformer::obs::init_from_env();
+    if args.get("obs-out").is_some() {
+        skyformer::obs::set_enabled(true);
+    }
     let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
 
     let mut cfg = TrainConfig::new(
@@ -75,6 +79,11 @@ fn main() -> skyformer::Result<()> {
             skyformer::util::json::to_string(&result.metrics.to_json()),
         )?;
         println!("metrics json : {path}");
+    }
+    match skyformer::obs::finish(args.get("obs-out")) {
+        Ok(paths) if !paths.is_empty() => eprintln!("obs: wrote {}", paths.join(", ")),
+        Ok(_) => {}
+        Err(e) => eprintln!("obs: dump failed: {e}"),
     }
     Ok(())
 }

@@ -9,6 +9,7 @@
 use crate::attention::exact::{row_softmax, softmax_attention};
 use crate::linalg::Matrix;
 use crate::nystrom::{self, Inverse, Kernel};
+use crate::obs;
 use crate::util::rng::Rng;
 
 /// The methods of the study (Figure 1's legend).
@@ -64,6 +65,7 @@ pub fn approximate(
     d: usize,
     rng: &mut Rng,
 ) -> Matrix {
+    let _span = obs::span("attention", method.name());
     match method {
         Method::Skyformer => skyformer(q, k, v, d, rng),
         Method::Nystromformer => nystromformer(q, k, v, d),

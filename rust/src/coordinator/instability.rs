@@ -12,9 +12,11 @@ use std::rc::Rc;
 
 use crate::coordinator::trainer::{TrainConfig, Trainer};
 use crate::data::batch::Split;
+use crate::obs;
 use crate::runtime::engine::{Engine, Executable};
 use crate::runtime::tensor::Tensor;
 use crate::util::error::Result;
+use crate::util::json;
 
 pub struct InstabilityProbe {
     trainer: Trainer,
@@ -52,9 +54,11 @@ impl InstabilityProbe {
 
     /// Run `steps` updates; returns tau_i per step.
     pub fn run(&mut self, steps: usize, lr: f32) -> Result<InstabilityResult> {
+        let _span = obs::span("instability", "probe");
         let n_p = self.exec_embed.spec.num_params;
         let mut taus = Vec::with_capacity(steps);
         for i in 0..steps {
+            let _step = obs::span("instability", "probe_step");
             let batch = self.trainer.dataset_batch(Split::Train, i as u64);
             let w_prev: Vec<Tensor> = self.trainer.state()[..n_p].to_vec();
             // fixed per-step seed so f() sees identical attention randomness
@@ -67,9 +71,41 @@ impl InstabilityProbe {
 
             let df = sq_frobenius_diff(&[f_cur], &[f_prev])?;
             let dw = sq_frobenius_diff(&w_cur, &w_prev)?;
-            taus.push(df / dw.max(1e-30));
+            let tau = df / dw.max(1e-30);
+            if !tau.is_finite() {
+                obs::event(
+                    "instability",
+                    "anomaly:non_finite_tau",
+                    Some(json::obj(vec![
+                        ("step", json::num(i as f64)),
+                        ("df", json::num(df as f64)),
+                        ("dw", json::num(dw as f64)),
+                    ])),
+                );
+                obs::counter_add("instability_anomalies_total", 1);
+            } else if dw <= 0.0 {
+                // zero parameter movement: tau is meaningless for this step
+                obs::event(
+                    "instability",
+                    "anomaly:zero_dw",
+                    Some(json::obj(vec![("step", json::num(i as f64))])),
+                );
+                obs::counter_add("instability_anomalies_total", 1);
+            } else {
+                obs::event(
+                    "instability",
+                    "tau",
+                    Some(json::obj(vec![
+                        ("step", json::num(i as f64)),
+                        ("tau", json::num(tau as f64)),
+                    ])),
+                );
+            }
+            taus.push(tau);
         }
-        Ok(InstabilityResult { taus })
+        let result = InstabilityResult { taus };
+        obs::gauge_set("instability_mean_tau", result.mean_tau() as f64);
+        Ok(result)
     }
 }
 

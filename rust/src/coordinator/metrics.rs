@@ -77,16 +77,22 @@ impl Metrics {
     }
 
     pub fn mean_step_seconds(&self) -> f64 {
-        if self.steps.is_empty() {
-            return 0.0;
-        }
-        // skip the first (compile-warm) step
+        // the first step pays compile warm-up and must never be counted;
+        // with only that step recorded there is no steady-state sample yet
         let tail: Vec<f64> = self.steps.iter().skip(1).map(|s| s.wall_seconds).collect();
         if tail.is_empty() {
-            self.steps[0].wall_seconds
+            0.0
         } else {
             tail.iter().sum::<f64>() / tail.len() as f64
         }
+    }
+
+    /// Clear all records for a fresh run in the same process.  `peak_bytes`
+    /// is kept: it is a property of the compiled model, not of one run.
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+        self.steps.clear();
+        self.evals.clear();
     }
 
     /// Serialise to JSON for EXPERIMENTS.md appendices / curve plotting.
@@ -145,6 +151,29 @@ mod tests {
         assert_eq!(m.best_eval_acc(), Some(0.25));
         assert!((m.mean_step_seconds() - 0.6).abs() < 1e-9);
         assert_eq!(m.final_train_loss(), Some(1.2));
+    }
+
+    #[test]
+    fn warmup_only_step_is_never_counted() {
+        let mut m = Metrics::new();
+        assert_eq!(m.mean_step_seconds(), 0.0);
+        m.record_step(0, 2.0, 0.1, 30.0); // compile-warm step
+        assert_eq!(m.mean_step_seconds(), 0.0);
+        m.record_step(1, 1.5, 0.2, 0.5);
+        assert!((m.mean_step_seconds() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears_records_keeps_peak() {
+        let mut m = Metrics::new();
+        m.record_step(0, 2.0, 0.1, 1.0);
+        m.record_eval(0, 1.9, 0.15);
+        m.observe_bytes(4096);
+        m.reset();
+        assert!(m.steps.is_empty());
+        assert!(m.evals.is_empty());
+        assert_eq!(m.peak_bytes, 4096);
+        assert_eq!(m.mean_step_seconds(), 0.0);
     }
 
     #[test]

@@ -1,8 +1,15 @@
 //! Training/eval orchestration over the AOT artifacts (Layer 3 proper).
+//!
+//! `trainer` and `instability` drive PJRT executables and are gated behind
+//! the `pjrt` feature; metrics/scheduler/checkpoint are pure and always
+//! available.
 pub mod checkpoint;
+#[cfg(feature = "pjrt")]
 pub mod instability;
 pub mod metrics;
 pub mod scheduler;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
+#[cfg(feature = "pjrt")]
 pub use trainer::{TrainConfig, Trainer};

@@ -14,6 +14,7 @@ use crate::coordinator::checkpoint;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::Schedule;
 use crate::data::batch::{Batch, Dataset, Split};
+use crate::obs;
 use crate::runtime::engine::{Engine, Executable};
 use crate::runtime::tensor::Tensor;
 use crate::util::error::{Error, Result};
@@ -107,12 +108,18 @@ impl Trainer {
 
     /// One optimizer step on the `step`-th deterministic train batch.
     pub fn step(&mut self, step: usize) -> Result<(f32, f32)> {
+        let _span = obs::span("train", "step");
         let batch = self.dataset.batch(Split::Train, step as u64);
         let lr = self.cfg.schedule.lr(step);
         let t0 = Instant::now();
         let (loss, acc) = self.step_on(&batch, step, lr)?;
-        self.metrics
-            .record_step(step, loss, acc, t0.elapsed().as_secs_f64());
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.record_step(step, loss, acc, wall);
+        obs::observe("train_step_seconds", wall);
+        obs::counter_add("train_steps_total", 1);
+        obs::gauge_set("train_loss", loss as f64);
+        obs::gauge_set("train_acc", acc as f64);
+        obs::gauge_set("train_lr", lr as f64);
         Ok((loss, acc))
     }
 
@@ -156,6 +163,7 @@ impl Trainer {
     }
 
     fn evaluate_state(&self, state: &[Tensor], split: Split, n: usize) -> Result<(f32, f32)> {
+        let _span = obs::span("train", "eval");
         let n_p = self.exec_train.spec.num_params;
         let mut loss_sum = 0.0f32;
         let mut acc_sum = 0.0f32;
@@ -184,6 +192,13 @@ impl Trainer {
 
     /// Full training run per the paper's protocol.
     pub fn train(&mut self) -> Result<TrainResult> {
+        // fresh run: drop step/eval records from earlier runs or manual
+        // step() probes in this process (keeps peak_bytes — model property)
+        self.metrics.reset();
+        let _span = obs::span(
+            "train",
+            &format!("train:{}/{}", self.cfg.task, self.cfg.attention),
+        );
         let start = Instant::now();
         let mut best_acc = f32::NEG_INFINITY;
         for step in 0..self.cfg.steps {
@@ -200,6 +215,8 @@ impl Trainer {
             if (step + 1) % self.cfg.eval_every == 0 || is_last {
                 let (el, ea) = self.evaluate(Split::Valid, self.cfg.eval_batches)?;
                 self.metrics.record_eval(step, el, ea);
+                obs::gauge_set("eval_loss", el as f64);
+                obs::gauge_set("eval_acc", ea as f64);
                 if ea > best_acc {
                     best_acc = ea;
                     self.best_state = Some(self.state.clone());
@@ -223,6 +240,7 @@ impl Trainer {
             )?;
         }
         let last_eval = self.metrics.evals.last().cloned();
+        obs::gauge_set("train_peak_bytes", self.metrics.peak_bytes as f64);
         Ok(TrainResult {
             best_eval_acc: best_acc.max(0.0),
             final_eval_acc: last_eval.as_ref().map(|e| e.acc).unwrap_or(0.0),

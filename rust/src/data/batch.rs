@@ -5,6 +5,7 @@
 //! reproducible across runs and machines, and the seed sweep of Table 1
 //! (3 seeds) re-generates identical data per seed.
 
+use crate::obs;
 use crate::runtime::manifest::TaskConfig;
 use crate::runtime::tensor::Tensor;
 use crate::util::error::{Error, Result};
@@ -72,6 +73,7 @@ impl Dataset {
 
     /// The `index`-th batch of a split: fully deterministic.
     pub fn batch(&self, split: Split, index: u64) -> Batch {
+        let _span = obs::span("data", "batch_gen");
         let b = self.task.batch_size;
         let n = self.task.seq_len;
         let per = if self.task.dual { 2 * n } else { n };

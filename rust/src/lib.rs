@@ -25,12 +25,24 @@
 //! ([`nystrom`]) on a dense f32 matrix substrate ([`linalg`]) — these power
 //! the paper's matrix-approximation study (Figure 1) and the
 //! property-test suite without any HLO involvement.
+//!
+//! Cross-cutting observability lives in [`obs`]: hierarchical span tracing
+//! over the train step → upload/execute/download pipeline and the
+//! Newton–Schulz solve, a global metrics registry (counters, gauges,
+//! log-bucketed histograms), and exporters for Chrome Trace Event Format,
+//! JSONL, and Prometheus text.  Enable with `SKYFORMER_TRACE=1` or
+//! `--obs-out <prefix>` on the binaries; see OBSERVABILITY.md.
+//!
+//! PJRT execution is gated behind the `pjrt` cargo feature so the
+//! native-rust layers (attention, nystrom, linalg, data, report, obs)
+//! build and test fully offline; the default feature set is empty.
 
 pub mod attention;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod nystrom;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod util;

@@ -7,6 +7,8 @@
 //!   twin of the L1 Pallas kernel, used by the Figure-1 study.
 
 use crate::linalg::Matrix;
+use crate::obs;
+use crate::util::json;
 
 /// Exact inverse by Gauss–Jordan with partial pivoting. Returns `None` if
 /// the matrix is numerically singular.
@@ -81,6 +83,7 @@ pub fn ns_preconditioner(m: &Matrix, gamma: f32) -> (Matrix, Vec<f32>) {
 /// `Z <- 1/4 Z (13 I - A Z (15 I - A Z (7 I - A Z)))`, seeded with
 /// `Z0 = A^T / (||A||_1 ||A||_inf)`.
 pub fn ns_inverse(m: &Matrix, gamma: f32, iters: usize) -> Matrix {
+    let _span = obs::span("nystrom", "ns_inverse");
     let n = m.rows;
     let (a, d_inv_sqrt) = ns_preconditioner(m, gamma);
     let eye = Matrix::eye(n);
@@ -93,12 +96,30 @@ pub fn ns_inverse(m: &Matrix, gamma: f32, iters: usize) -> Matrix {
         .fold(0.0f32, f32::max);
     let mut z = a.transpose().scale(1.0 / (norm1 * norminf).max(1e-30));
 
-    for _ in 0..iters {
+    let mut residual = f32::NAN;
+    for iter in 0..iters {
         let az = a.matmul(&z);
+        // convergence diagnostic ||AZ - I||_max — az is already in hand,
+        // so this is one cheap pass; only taken when tracing is on
+        if obs::enabled() {
+            residual = az.sub(&eye).max_abs();
+            obs::event(
+                "nystrom",
+                "ns_iter",
+                Some(json::obj(vec![
+                    ("iter", json::num(iter as f64)),
+                    ("residual", json::num(residual as f64)),
+                ])),
+            );
+            obs::observe("ns_iter_residual", residual as f64);
+        }
         let t1 = eye.scale(7.0).sub(&az);
         let t2 = eye.scale(15.0).sub(&az.matmul(&t1));
         let t3 = eye.scale(13.0).sub(&az.matmul(&t2));
         z = z.matmul(&t3).scale(0.25);
+    }
+    if obs::enabled() && residual.is_finite() {
+        obs::gauge_set("ns_final_residual", residual as f64);
     }
     // undo preconditioning: (M+gI)^{-1} = D^{-1/2} Z D^{-1/2}
     Matrix::from_fn(n, n, |i, j| d_inv_sqrt[i] * z[(i, j)] * d_inv_sqrt[j])

@@ -11,15 +11,25 @@
 //! skyformer svd     --task listops --attention softmax     # Figure 4
 //! ```
 
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
 use skyformer::attention::{self, exact, probes};
+#[cfg(feature = "pjrt")]
 use skyformer::coordinator::instability::InstabilityProbe;
+#[cfg(feature = "pjrt")]
 use skyformer::coordinator::scheduler::Schedule;
+#[cfg(feature = "pjrt")]
 use skyformer::coordinator::trainer::{TrainConfig, Trainer};
+#[cfg(feature = "pjrt")]
 use skyformer::data::batch::Split;
-use skyformer::linalg::{norms, svd, Matrix};
-use skyformer::report::tables::{fmt_bytes, fmt_secs, Table};
+#[cfg(feature = "pjrt")]
+use skyformer::linalg::{svd, Matrix};
+use skyformer::linalg::norms;
+#[cfg(feature = "pjrt")]
+use skyformer::report::tables::{fmt_bytes, fmt_secs};
+use skyformer::report::tables::Table;
+#[cfg(feature = "pjrt")]
 use skyformer::runtime::engine::Engine;
 use skyformer::util::args::Args;
 use skyformer::util::rng::Rng;
@@ -27,6 +37,11 @@ use skyformer::Result;
 
 fn main() {
     let args = Args::from_env();
+    let env_prefix = skyformer::obs::init_from_env();
+    let obs_out = args.get("obs-out").map(|s| s.to_string()).or(env_prefix);
+    if obs_out.is_some() {
+        skyformer::obs::set_enabled(true);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match run(cmd, &args) {
         Ok(()) => 0,
@@ -35,21 +50,37 @@ fn main() {
             1
         }
     };
+    if let Some(prefix) = obs_out {
+        match skyformer::obs::dump(&prefix) {
+            Ok(paths) => eprintln!("obs: wrote {}", paths.join(", ")),
+            Err(e) => eprintln!("obs: dump failed: {e}"),
+        }
+    }
     std::process::exit(code);
 }
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
+        #[cfg(feature = "pjrt")]
         "info" => info(args),
+        #[cfg(feature = "pjrt")]
         "train" => train(args),
+        #[cfg(feature = "pjrt")]
         "sweep" => sweep(args),
         "approx" => approx(args),
+        #[cfg(feature = "pjrt")]
         "instability" => instability(args),
+        #[cfg(feature = "pjrt")]
         "svd" => svd_cmd(args),
+        #[cfg(not(feature = "pjrt"))]
+        "info" | "train" | "sweep" | "instability" | "svd" => Err(skyformer::Error::Config(
+            format!("`{cmd}` needs PJRT: rebuild with `--features pjrt`"),
+        )),
         _ => {
             print!("{HELP}");
             Ok(())
@@ -79,8 +110,15 @@ COMMANDS
                   --task listops --attention softmax [--steps 100]
 GLOBAL
   --artifacts DIR   artifact directory (default: artifacts)
+  --obs-out PREFIX  dump observability sinks on exit: PREFIX.trace.json
+                    (chrome://tracing), PREFIX.events.jsonl,
+                    PREFIX.metrics.json, PREFIX.metrics.prom; implies tracing
+ENV
+  SKYFORMER_TRACE=1        enable span tracing
+  SKYFORMER_OBS_OUT=PREFIX same as --obs-out (flag wins)
 "#;
 
+#[cfg(feature = "pjrt")]
 fn info(args: &Args) -> Result<()> {
     let engine = Engine::new(artifacts_dir(args))?;
     println!("platform: {}", engine.platform());
@@ -103,6 +141,7 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn train_config_from(args: &Args) -> Result<TrainConfig> {
     let task = args.get_or("task", "listops").to_string();
     let attention = args.get_or("attention", "skyformer").to_string();
@@ -123,6 +162,7 @@ fn train_config_from(args: &Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+#[cfg(feature = "pjrt")]
 fn train(args: &Args) -> Result<()> {
     let engine = Engine::new(artifacts_dir(args))?;
     let mut cfg = train_config_from(args)?;
@@ -140,6 +180,7 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn sweep(args: &Args) -> Result<()> {
     let engine = Engine::new(artifacts_dir(args))?;
     let tasks = args
@@ -285,6 +326,7 @@ fn approx(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn instability(args: &Args) -> Result<()> {
     let engine = Engine::new(artifacts_dir(args))?;
     let task = args.get_or("task", "listops").to_string();
@@ -341,6 +383,7 @@ fn instability(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn svd_cmd(args: &Args) -> Result<()> {
     let engine = Engine::new(artifacts_dir(args))?;
     let task = args.get_or("task", "listops").to_string();

@@ -16,6 +16,7 @@
 pub mod theory;
 
 use crate::linalg::{solve, Matrix};
+use crate::obs;
 use crate::util::rng::Rng;
 
 /// PSD kernel functions the paper uses.
@@ -107,12 +108,22 @@ pub fn modified_nystrom_with_landmarks(
     landmarks: &[usize],
     inverse: Inverse,
 ) -> Matrix {
+    let _span = obs::span("nystrom", "modified_nystrom");
     let x = q.vcat(k);
     let lm = x.take_rows(landmarks);
-    let c_ql = kernel_matrix(kernel, q, &lm); // (n, d)
-    let c_lk = kernel_matrix(kernel, &lm, k); // (d, m)
-    let gram = kernel_matrix(kernel, &lm, &lm); // (d, d) PSD
-    let inv = inverse.apply(&gram);
+    let (c_ql, c_lk, gram) = {
+        let _s = obs::span("nystrom", "kernel_blocks");
+        (
+            kernel_matrix(kernel, q, &lm),   // (n, d)
+            kernel_matrix(kernel, &lm, k),   // (d, m)
+            kernel_matrix(kernel, &lm, &lm), // (d, d) PSD
+        )
+    };
+    let inv = {
+        let _s = obs::span("nystrom", "inverse");
+        inverse.apply(&gram)
+    };
+    let _s = obs::span("nystrom", "assemble");
     c_ql.matmul(&inv).matmul(&c_lk)
 }
 
@@ -126,12 +137,22 @@ pub fn modified_nystrom_apply(
     landmarks: &[usize],
     inverse: Inverse,
 ) -> Matrix {
+    let _span = obs::span("nystrom", "modified_nystrom_apply");
     let x = q.vcat(k);
     let lm = x.take_rows(landmarks);
-    let c_ql = kernel_matrix(kernel, q, &lm);
-    let c_lk = kernel_matrix(kernel, &lm, k);
-    let gram = kernel_matrix(kernel, &lm, &lm);
-    let inv = inverse.apply(&gram);
+    let (c_ql, c_lk, gram) = {
+        let _s = obs::span("nystrom", "kernel_blocks");
+        (
+            kernel_matrix(kernel, q, &lm),
+            kernel_matrix(kernel, &lm, k),
+            kernel_matrix(kernel, &lm, &lm),
+        )
+    };
+    let inv = {
+        let _s = obs::span("nystrom", "inverse");
+        inverse.apply(&gram)
+    };
+    let _s = obs::span("nystrom", "assemble");
     c_ql.matmul(&inv.matmul(&c_lk.matmul(v)))
 }
 

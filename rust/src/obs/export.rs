@@ -1,0 +1,203 @@
+//! Sinks for the obs layer: Chrome Trace Event Format, structured JSONL,
+//! and a combined `dump` that writes trace + events + metrics (JSON and
+//! Prometheus text) under one path prefix.
+//!
+//! The Chrome trace can be loaded directly in `chrome://tracing` or
+//! <https://ui.perfetto.dev>; nested spans render as stacked bars per
+//! thread lane.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::obs::metrics;
+use crate::obs::span::{self, Phase, TraceEvent};
+use crate::util::error::Result;
+use crate::util::json::{self, Value};
+
+/// One event as a Chrome Trace Event Format object.
+///
+/// Complete spans use `ph: "X"` (ts + dur, microseconds); instant events
+/// use `ph: "i"` with thread scope.
+pub fn event_to_json(ev: &TraceEvent) -> Value {
+    let mut fields = vec![
+        ("name", json::s(ev.name.as_str())),
+        ("cat", json::s(ev.cat)),
+        ("pid", json::num(1.0)),
+        ("tid", json::num(ev.tid as f64)),
+        ("ts", json::num(ev.ts_ns as f64 / 1e3)),
+    ];
+    match &ev.phase {
+        Phase::Complete { dur_ns } => {
+            fields.push(("ph", json::s("X")));
+            fields.push(("dur", json::num(*dur_ns as f64 / 1e3)));
+        }
+        Phase::Instant => {
+            fields.push(("ph", json::s("i")));
+            fields.push(("s", json::s("t")));
+        }
+    }
+    if let Some(args) = &ev.args {
+        fields.push(("args", args.clone()));
+    }
+    json::obj(fields)
+}
+
+/// Build the full `{"traceEvents": [...]}` document from a snapshot of
+/// the event buffer.
+pub fn chrome_trace(events: &[TraceEvent]) -> Value {
+    let evs: Vec<Value> = events.iter().map(event_to_json).collect();
+    let mut fields = vec![
+        ("traceEvents", Value::Array(evs)),
+        ("displayTimeUnit", json::s("ms")),
+    ];
+    let dropped = span::dropped_events();
+    if dropped > 0 {
+        fields.push(("droppedEvents", json::num(dropped as f64)));
+    }
+    json::obj(fields)
+}
+
+/// Serialize events one-JSON-object-per-line (structured event log).
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&json::to_string(&event_to_json(ev)));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn write_chrome_trace(path: impl AsRef<Path>, events: &[TraceEvent]) -> Result<()> {
+    write_text(path, &json::to_string(&chrome_trace(events)))
+}
+
+pub fn write_jsonl(path: impl AsRef<Path>, events: &[TraceEvent]) -> Result<()> {
+    write_text(path, &to_jsonl(events))
+}
+
+fn write_text(path: impl AsRef<Path>, text: &str) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(text.as_bytes())?;
+    Ok(())
+}
+
+/// Write every sink under one prefix:
+/// `<prefix>.trace.json`, `<prefix>.events.jsonl`,
+/// `<prefix>.metrics.json`, `<prefix>.metrics.prom`.
+/// Returns the paths written.
+pub fn dump(prefix: &str) -> Result<Vec<String>> {
+    let events = span::snapshot_events();
+    let registry = metrics::snapshot();
+    let paths = vec![
+        format!("{prefix}.trace.json"),
+        format!("{prefix}.events.jsonl"),
+        format!("{prefix}.metrics.json"),
+        format!("{prefix}.metrics.prom"),
+    ];
+    write_chrome_trace(&paths[0], &events)?;
+    write_jsonl(&paths[1], &events)?;
+    write_text(&paths[2], &json::to_string(&registry.to_json()))?;
+    write_text(&paths[3], &registry.to_prometheus())?;
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                name: "step".into(),
+                cat: "train",
+                phase: Phase::Complete { dur_ns: 12_500 },
+                ts_ns: 1_000,
+                tid: 1,
+                args: None,
+            },
+            TraceEvent {
+                name: "upload".into(),
+                cat: "runtime",
+                phase: Phase::Complete { dur_ns: 2_000 },
+                ts_ns: 1_500,
+                tid: 1,
+                args: Some(json::obj(vec![("bytes", json::num(4096.0))])),
+            },
+            TraceEvent {
+                name: "anomaly".into(),
+                cat: "instability",
+                phase: Phase::Instant,
+                ts_ns: 9_000,
+                tid: 2,
+                args: Some(json::obj(vec![("tau", json::num(0.5))])),
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_nests() {
+        let evs = sample_events();
+        let text = json::to_string(&chrome_trace(&evs));
+        let doc = json::parse(&text).unwrap();
+        let arr = doc.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+
+        let step = &arr[0];
+        assert_eq!(step.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(step.get("ts").unwrap().as_f64(), Some(1.0)); // 1000 ns = 1 µs
+        assert_eq!(step.get("dur").unwrap().as_f64(), Some(12.5));
+
+        // child (upload) contained within parent (step) in µs space
+        let upload = &arr[1];
+        let (pts, pdur) = (
+            step.get("ts").unwrap().as_f64().unwrap(),
+            step.get("dur").unwrap().as_f64().unwrap(),
+        );
+        let (cts, cdur) = (
+            upload.get("ts").unwrap().as_f64().unwrap(),
+            upload.get("dur").unwrap().as_f64().unwrap(),
+        );
+        assert!(cts >= pts && cts + cdur <= pts + pdur);
+        assert_eq!(upload.get("args").unwrap().get("bytes").unwrap().as_f64(), Some(4096.0));
+
+        let instant = &arr[2];
+        assert_eq!(instant.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(instant.get("s").unwrap().as_str(), Some("t"));
+        assert!(instant.get("dur").is_none());
+    }
+
+    #[test]
+    fn jsonl_one_valid_object_per_line() {
+        let text = to_jsonl(&sample_events());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            let v = json::parse(line).unwrap();
+            assert!(v.get("name").is_some());
+            assert!(v.get("ts").is_some());
+        }
+    }
+
+    #[test]
+    fn dump_writes_all_four_sinks() {
+        let dir = std::env::temp_dir().join("skyformer_obs_export_test");
+        let prefix = dir.join("run").to_string_lossy().into_owned();
+        let paths = dump(&prefix).unwrap();
+        assert_eq!(paths.len(), 4);
+        for p in &paths {
+            let text = std::fs::read_to_string(p).unwrap();
+            if p.ends_with(".trace.json") {
+                let doc = json::parse(&text).unwrap();
+                assert!(doc.get("traceEvents").is_some());
+            } else if p.ends_with(".metrics.json") {
+                assert!(json::parse(&text).is_ok());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

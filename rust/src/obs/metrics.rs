@@ -1,0 +1,404 @@
+//! Global metrics registry: counters, gauges, and log-bucketed histograms,
+//! exportable as JSON and as Prometheus text format.
+//!
+//! Metrics are always on (they are cheap relative to the step/solve
+//! granularity they measure — one mutex lock plus a map lookup); span
+//! *tracing* is the opt-in part of the obs layer.  Names are free-form
+//! internally and sanitised on Prometheus export.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::util::json::{self, Value};
+
+/// Number of histogram buckets. Bucket `i < NUM_BUCKETS - 1` covers values
+/// `<= bucket_bound(i)`; the last bucket is the +Inf overflow.
+pub const NUM_BUCKETS: usize = 64;
+
+/// Upper bound of bucket `i`: `1e-9 * 2^i` — 1 ns up to ~2.9 centuries
+/// when values are seconds, with log2 resolution everywhere between.
+pub fn bucket_bound(i: usize) -> f64 {
+    1e-9 * 2f64.powi(i as i32)
+}
+
+/// Index of the bucket a value lands in (non-positive and NaN values are
+/// clamped into bucket 0).
+pub fn bucket_index(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    for i in 0..NUM_BUCKETS - 1 {
+        if v <= bucket_bound(i) {
+            return i;
+        }
+    }
+    NUM_BUCKETS - 1
+}
+
+/// Log-bucketed histogram with sum/count/min/max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: vec![0; NUM_BUCKETS],
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// One registered metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(Histogram),
+}
+
+/// A snapshot (or the live registry) of every metric, keyed by name.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub metrics: BTreeMap<String, Metric>,
+    /// Updates that hit an existing metric of a different type (ignored
+    /// rather than corrupting — never silent).
+    pub type_conflicts: u64,
+}
+
+impl Registry {
+    fn counter_add(&mut self, name: &str, delta: u64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Counter(c)) => *c += delta,
+            Some(_) => self.type_conflicts += 1,
+            None => {
+                self.metrics.insert(name.to_string(), Metric::Counter(delta));
+            }
+        }
+    }
+
+    fn gauge_set(&mut self, name: &str, v: f64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Gauge(g)) => *g = v,
+            Some(_) => self.type_conflicts += 1,
+            None => {
+                self.metrics.insert(name.to_string(), Metric::Gauge(v));
+            }
+        }
+    }
+
+    fn observe(&mut self, name: &str, v: f64) {
+        match self.metrics.get_mut(name) {
+            Some(Metric::Histogram(h)) => h.observe(v),
+            Some(_) => self.type_conflicts += 1,
+            None => {
+                let mut h = Histogram::default();
+                h.observe(v);
+                self.metrics.insert(name.to_string(), Metric::Histogram(h));
+            }
+        }
+    }
+
+    /// JSON export (used by `--obs-out` and the bench artifacts).
+    pub fn to_json(&self) -> Value {
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut histograms = Vec::new();
+        for (name, m) in &self.metrics {
+            match m {
+                Metric::Counter(c) => counters.push((name.as_str(), json::num(*c as f64))),
+                Metric::Gauge(g) => gauges.push((name.as_str(), json::num(*g))),
+                Metric::Histogram(h) => {
+                    let buckets: Vec<Value> = h
+                        .buckets
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &c)| c > 0)
+                        .map(|(i, &c)| {
+                            json::obj(vec![
+                                (
+                                    "le",
+                                    if i + 1 == NUM_BUCKETS {
+                                        json::s("+Inf")
+                                    } else {
+                                        json::num(bucket_bound(i))
+                                    },
+                                ),
+                                ("count", json::num(c as f64)),
+                            ])
+                        })
+                        .collect();
+                    histograms.push((
+                        name.as_str(),
+                        json::obj(vec![
+                            ("count", json::num(h.count as f64)),
+                            ("sum", json::num(h.sum)),
+                            ("min", json::num(if h.count == 0 { 0.0 } else { h.min })),
+                            ("max", json::num(if h.count == 0 { 0.0 } else { h.max })),
+                            ("mean", json::num(h.mean())),
+                            ("buckets", Value::Array(buckets)),
+                        ]),
+                    ));
+                }
+            }
+        }
+        json::obj(vec![
+            ("counters", json::obj(counters)),
+            ("gauges", json::obj(gauges)),
+            ("histograms", json::obj(histograms)),
+            ("type_conflicts", json::num(self.type_conflicts as f64)),
+        ])
+    }
+
+    /// Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.metrics {
+            let n = sanitize_name(name);
+            match m {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {n} counter\n{n} {c}\n"));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", fmt_value(*g)));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {n} histogram\n"));
+                    let mut cumulative = 0u64;
+                    let last_nonzero = h
+                        .buckets
+                        .iter()
+                        .rposition(|&c| c > 0)
+                        .unwrap_or(0)
+                        .min(NUM_BUCKETS - 2);
+                    for (i, &c) in h.buckets.iter().enumerate().take(last_nonzero + 1) {
+                        cumulative += c;
+                        if c > 0 {
+                            out.push_str(&format!(
+                                "{n}_bucket{{le=\"{}\"}} {cumulative}\n",
+                                fmt_value(bucket_bound(i))
+                            ));
+                        }
+                    }
+                    out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+                    out.push_str(&format!("{n}_sum {}\n", fmt_value(h.sum)));
+                    out.push_str(&format!("{n}_count {}\n", h.count));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Map an arbitrary metric name onto the Prometheus charset
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`.  Every disallowed char becomes `_`; a
+/// leading digit gets a `_` prefix; empty names become `_`.
+pub fn sanitize_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    if out.as_bytes()[0].is_ascii_digit() {
+        out.insert(0, '_');
+    }
+    out
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn global() -> MutexGuard<'static, Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY
+        .get_or_init(|| Mutex::new(Registry::default()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Add `delta` to counter `name` (created on first use).
+pub fn counter_add(name: &str, delta: u64) {
+    global().counter_add(name, delta);
+}
+
+/// Set gauge `name` to `v` (created on first use).
+pub fn gauge_set(name: &str, v: f64) {
+    global().gauge_set(name, v);
+}
+
+/// Record `v` into histogram `name` (created on first use).
+pub fn observe(name: &str, v: f64) {
+    global().observe(name, v);
+}
+
+/// Clone the current registry state.
+pub fn snapshot() -> Registry {
+    global().clone()
+}
+
+/// Clear every metric (fresh runs in one process; tests).
+pub fn reset() {
+    let mut g = global();
+    g.metrics.clear();
+    g.type_conflicts = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_inclusive_log2() {
+        // exact boundary lands in its own bucket; epsilon above moves up
+        assert_eq!(bucket_index(1e-9), 0);
+        assert_eq!(bucket_index(2e-9), 1);
+        assert_eq!(bucket_index(2.0000001e-9), 2);
+        assert_eq!(bucket_index(1.0), bucket_index(bucket_bound(bucket_index(1.0))));
+        // monotone in v
+        let mut prev = 0;
+        for k in 0..40 {
+            let idx = bucket_index(1e-9 * 1.9f64.powi(k));
+            assert!(idx >= prev);
+            prev = idx;
+        }
+        // clamps
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-5.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(1e300), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_accumulates() {
+        let mut h = Histogram::default();
+        for v in [0.001, 0.002, 0.004, 4000.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count, 4);
+        assert!((h.sum - 4000.007).abs() < 1e-9);
+        assert_eq!(h.min, 0.001);
+        assert_eq!(h.max, 4000.0);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn registry_local_roundtrip_json() {
+        let mut r = Registry::default();
+        r.counter_add("steps_total", 3);
+        r.gauge_set("loss", 1.25);
+        r.observe("step_seconds", 0.01);
+        r.observe("step_seconds", 0.02);
+        let v = r.to_json();
+        let text = json::to_string(&v);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("counters").unwrap().get("steps_total").unwrap().as_f64(),
+            Some(3.0)
+        );
+        assert_eq!(back.get("gauges").unwrap().get("loss").unwrap().as_f64(), Some(1.25));
+        let h = back.get("histograms").unwrap().get("step_seconds").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(2.0));
+        assert!(!h.get("buckets").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn type_conflicts_do_not_corrupt() {
+        let mut r = Registry::default();
+        r.counter_add("x", 1);
+        r.gauge_set("x", 9.0); // wrong type: ignored, counted
+        r.observe("x", 1.0); // wrong type: ignored, counted
+        assert_eq!(r.metrics.get("x"), Some(&Metric::Counter(1)));
+        assert_eq!(r.type_conflicts, 2);
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let mut r = Registry::default();
+        r.counter_add("train steps (total)", 7);
+        r.observe("step_seconds", 0.5);
+        r.observe("step_seconds", 1e9); // overflow bucket
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE step_seconds histogram"), "{text}");
+        assert!(text.contains("step_seconds_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("step_seconds_count 2"), "{text}");
+        // spaces/parens sanitised
+        assert!(text.contains("train_steps__total_ 7"), "{text}");
+        // cumulative: the 0.5 bucket count is 1
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("step_seconds_bucket") && !l.contains("+Inf"))
+            .unwrap();
+        assert!(line.ends_with(" 1"), "{line}");
+    }
+
+    #[test]
+    fn sanitize_covers_edge_cases() {
+        assert_eq!(sanitize_name("ok_name:v1"), "ok_name:v1");
+        assert_eq!(sanitize_name("9lives"), "_9lives");
+        assert_eq!(sanitize_name(""), "_");
+        assert_eq!(sanitize_name("a b\nc\"d"), "a_b_c_d");
+        assert_eq!(sanitize_name("é😀"), "__");
+    }
+
+    #[test]
+    fn global_registry_api() {
+        counter_add("test_metrics_global_counter", 2);
+        counter_add("test_metrics_global_counter", 3);
+        gauge_set("test_metrics_global_gauge", -1.5);
+        observe("test_metrics_global_hist", 0.25);
+        let snap = snapshot();
+        assert_eq!(
+            snap.metrics.get("test_metrics_global_counter"),
+            Some(&Metric::Counter(5))
+        );
+        assert_eq!(
+            snap.metrics.get("test_metrics_global_gauge"),
+            Some(&Metric::Gauge(-1.5))
+        );
+        match snap.metrics.get("test_metrics_global_hist") {
+            Some(Metric::Histogram(h)) => assert!(h.count >= 1),
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+}

@@ -16,6 +16,7 @@ use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
+use crate::obs;
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::tensor::Tensor;
 use crate::util::error::{Error, Result};
@@ -65,20 +66,36 @@ impl Executable {
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.check_inputs(inputs)?;
         let mut stats = self.stats.borrow_mut();
+        let _run = obs::span("runtime", &format!("run:{}", self.spec.name));
 
         let t0 = Instant::now();
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        stats.upload_seconds += t0.elapsed().as_secs_f64();
+        let literals: Vec<xla::Literal> = {
+            let _s = obs::span("runtime", "upload");
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?
+        };
+        let upload = t0.elapsed().as_secs_f64();
+        stats.upload_seconds += upload;
+        obs::observe("runtime_upload_seconds", upload);
 
         let t1 = Instant::now();
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        stats.exec_seconds += t1.elapsed().as_secs_f64();
+        let result = {
+            let _s = obs::span("runtime", "execute");
+            self.exe.execute::<xla::Literal>(&literals)?
+        };
+        let exec = t1.elapsed().as_secs_f64();
+        stats.exec_seconds += exec;
+        obs::observe("runtime_exec_seconds", exec);
 
         let t2 = Instant::now();
-        let out = Self::unpack(&self.spec, &result)?;
-        stats.download_seconds += t2.elapsed().as_secs_f64();
+        let out = {
+            let _s = obs::span("runtime", "download");
+            Self::unpack(&self.spec, &result)?
+        };
+        let download = t2.elapsed().as_secs_f64();
+        stats.download_seconds += download;
+        obs::observe("runtime_download_seconds", download);
         stats.calls += 1;
+        obs::counter_add("runtime_calls_total", 1);
         Ok(out)
     }
 
@@ -90,9 +107,15 @@ impl Executable {
     ) -> Result<Vec<xla::PjRtBuffer>> {
         let mut stats = self.stats.borrow_mut();
         let t1 = Instant::now();
-        let mut result = self.exe.execute_b::<xla::PjRtBuffer>(buffers)?;
-        stats.exec_seconds += t1.elapsed().as_secs_f64();
+        let mut result = {
+            let _s = obs::span("runtime", "execute");
+            self.exe.execute_b::<xla::PjRtBuffer>(buffers)?
+        };
+        let exec = t1.elapsed().as_secs_f64();
+        stats.exec_seconds += exec;
+        obs::observe("runtime_exec_seconds", exec);
         stats.calls += 1;
+        obs::counter_add("runtime_calls_total", 1);
         // single-device: one replica, whose outputs are the tuple elements
         if result.len() != 1 {
             return Err(Error::Artifact {
@@ -174,6 +197,8 @@ impl Engine {
 
     /// Upload a host tensor to a device buffer.
     pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let _s = obs::span("runtime", "upload");
+        let t0 = Instant::now();
         let buf = match t {
             Tensor::F32 { shape, data } => {
                 self.client.buffer_from_host_buffer::<f32>(data, shape, None)?
@@ -185,13 +210,18 @@ impl Engine {
                 self.client.buffer_from_host_buffer::<u32>(data, shape, None)?
             }
         };
+        obs::observe("runtime_upload_seconds", t0.elapsed().as_secs_f64());
         Ok(buf)
     }
 
     /// Download a device buffer to a host tensor.
     pub fn download(&self, b: &xla::PjRtBuffer) -> Result<Tensor> {
+        let _s = obs::span("runtime", "download");
+        let t0 = Instant::now();
         let lit = b.to_literal_sync()?;
-        Tensor::from_literal(&lit)
+        let t = Tensor::from_literal(&lit)?;
+        obs::observe("runtime_download_seconds", t0.elapsed().as_secs_f64());
+        Ok(t)
     }
 
     /// Load + compile (cached) the artifact for (task, attention, kind).

@@ -10,10 +10,12 @@
 //! * [`manifest`] — typed view of `artifacts/manifest.json`
 //! * [`engine`] — PJRT client + compiled-executable cache + typed `run`
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use tensor::{DType, Tensor};

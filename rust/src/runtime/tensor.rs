@@ -143,6 +143,7 @@ impl Tensor {
     }
 
     /// Convert to an `xla::Literal` (host copy).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let (ty, bytes): (xla::ElementType, &[u8]) = match self {
             Tensor::F32 { data, .. } => (xla::ElementType::F32, bytemuck_cast(data)),
@@ -157,6 +158,7 @@ impl Tensor {
     }
 
     /// Convert from an `xla::Literal` (host copy).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -180,6 +182,7 @@ impl Tensor {
 
 /// Reinterpret a 4-byte-element slice as bytes (little-endian host layout,
 /// which is what PJRT CPU expects).
+#[cfg(feature = "pjrt")]
 fn bytemuck_cast<T>(data: &[T]) -> &[u8] {
     unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
@@ -215,8 +218,9 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn literal_roundtrip() {
-        // requires the PJRT shared lib to be loadable; literal ops are host-only
+        // literal ops are host-only; works against the stub too
         let t = Tensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let lit = t.to_literal().unwrap();
         let back = Tensor::from_literal(&lit).unwrap();

@@ -6,6 +6,9 @@
 
 use std::time::{Duration, Instant};
 
+use crate::obs;
+use crate::util::json::{self, Value};
+
 #[derive(Debug, Clone)]
 pub struct Stats {
     pub name: String,
@@ -19,6 +22,18 @@ pub struct Stats {
 impl Stats {
     pub fn mean_ms(&self) -> f64 {
         self.mean.as_secs_f64() * 1e3
+    }
+
+    /// JSON row for bench artifacts (`BENCH_*.json`).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(self.name.as_str())),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_seconds", json::num(self.mean.as_secs_f64())),
+            ("p50_seconds", json::num(self.p50.as_secs_f64())),
+            ("p95_seconds", json::num(self.p95.as_secs_f64())),
+            ("min_seconds", json::num(self.min.as_secs_f64())),
+        ])
     }
 }
 
@@ -45,6 +60,12 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Stats {
         if samples.len() >= 10_000 {
             break;
         }
+    }
+    // feed the samples into the obs registry so bench artifacts can embed
+    // the same log-bucketed distribution the trainer exports
+    let hist_name = format!("bench_{name}_seconds");
+    for s in &samples {
+        obs::observe(&hist_name, s.as_secs_f64());
     }
     samples.sort_unstable();
     let total: Duration = samples.iter().sum();
@@ -76,6 +97,18 @@ mod tests {
         });
         assert!(s.iters >= 5);
         assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn stats_json_has_all_fields() {
+        let s = bench("json_smoke", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        let v = s.to_json();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("json_smoke"));
+        for key in ["iters", "mean_seconds", "p50_seconds", "p95_seconds", "min_seconds"] {
+            assert!(v.get(key).unwrap().as_f64().is_some(), "{key}");
+        }
     }
 
     #[test]

@@ -1,35 +1,74 @@
 //! Crate-wide error type.
 //!
-//! Wraps xla/PJRT failures, artifact/manifest problems and IO so the
-//! coordinator can surface one uniform `Result`.
+//! Wraps xla/PJRT failures (behind the `pjrt` feature), artifact/manifest
+//! problems and IO so the coordinator can surface one uniform `Result`.
+//! Display/Error impls are hand-rolled — no proc-macro dependencies in the
+//! offline build.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla/pjrt: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("json parse error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
-    #[error("manifest: {0}")]
     Manifest(String),
 
-    #[error("artifact {name}: {message}")]
     Artifact { name: String, message: String },
 
-    #[error("shape mismatch: expected {expected}, got {got}")]
     Shape { expected: String, got: String },
 
-    #[error("config: {0}")]
     Config(String),
 
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla/pjrt: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Artifact { name, message } => write!(f, "artifact {name}: {message}"),
+            Error::Shape { expected, got } => {
+                write!(f, "shape mismatch: expected {expected}, got {got}")
+            }
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -37,5 +76,24 @@ pub type Result<T> = std::result::Result<T, Error>;
 impl Error {
     pub fn other(msg: impl Into<String>) -> Self {
         Error::Other(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Shape { expected: "f32".into(), got: "i32".into() };
+        assert_eq!(format!("{e}"), "shape mismatch: expected f32, got i32");
+        let e = Error::Json { offset: 7, message: "bad".into() };
+        assert!(format!("{e}").contains("byte 7"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -1,0 +1,179 @@
+//! Integration tests for the observability layer: spans recorded through
+//! the public API, Chrome-trace/JSONL serialization round-trips via
+//! `util::json`, and the metrics export formats.
+
+use skyformer::obs::{self, export, metrics};
+use skyformer::util::json;
+
+/// All tests in this file toggle the process-wide tracing flag, so they
+/// serialise on the span test lock and use unique category names.
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    obs::span::test_lock().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn events_in(cat: &'static str) -> Vec<obs::TraceEvent> {
+    obs::snapshot_events()
+        .into_iter()
+        .filter(|e| e.cat == cat)
+        .collect()
+}
+
+#[test]
+fn nested_spans_roundtrip_through_chrome_trace() {
+    let _g = lock();
+    obs::set_enabled(true);
+    {
+        let _outer = obs::span("it_nest", "outer");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        {
+            let _inner = obs::span("it_nest", "inner");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    let evs = events_in("it_nest");
+    let text = json::to_string(&export::chrome_trace(&evs));
+    let doc = json::parse(&text).unwrap();
+    let arr = doc.get("traceEvents").unwrap().as_array().unwrap();
+    assert_eq!(arr.len(), 2);
+
+    let find = |name: &str| {
+        arr.iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some(name))
+            .unwrap()
+    };
+    let (outer, inner) = (find("outer"), find("inner"));
+    for e in [outer, inner] {
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("pid").unwrap().as_f64(), Some(1.0));
+        assert!(e.get("ts").unwrap().as_f64().is_some());
+        assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
+    }
+    // chrome://tracing infers nesting from containment — verify it holds
+    let ots = outer.get("ts").unwrap().as_f64().unwrap();
+    let odur = outer.get("dur").unwrap().as_f64().unwrap();
+    let its = inner.get("ts").unwrap().as_f64().unwrap();
+    let idur = inner.get("dur").unwrap().as_f64().unwrap();
+    assert!(its >= ots && its + idur <= ots + odur);
+    assert_eq!(
+        outer.get("tid").unwrap().as_f64(),
+        inner.get("tid").unwrap().as_f64()
+    );
+}
+
+#[test]
+fn jsonl_lines_parse_independently() {
+    let _g = lock();
+    obs::set_enabled(true);
+    obs::event(
+        "it_jsonl",
+        "mark \"quoted\"\nnewline",
+        Some(json::obj(vec![("k", json::s("v"))])),
+    );
+    {
+        let _s = obs::span("it_jsonl", "work");
+    }
+    let evs = events_in("it_jsonl");
+    let text = export::to_jsonl(&evs);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2);
+    for line in &lines {
+        let v = json::parse(line).unwrap();
+        assert_eq!(v.get("cat").unwrap().as_str(), Some("it_jsonl"));
+    }
+    // the quoted/newlined name survived the escape round-trip
+    let first = json::parse(lines[0]).unwrap();
+    assert_eq!(
+        first.get("name").unwrap().as_str(),
+        Some("mark \"quoted\"\nnewline")
+    );
+}
+
+#[test]
+fn metrics_snapshot_exports_both_formats() {
+    let _g = lock();
+    metrics::counter_add("it_obs_steps_total", 4);
+    metrics::observe("it_obs_step_seconds", 0.012);
+    metrics::observe("it_obs_step_seconds", 0.015);
+    let snap = metrics::snapshot();
+
+    let v = snap.to_json();
+    let back = json::parse(&json::to_string(&v)).unwrap();
+    assert_eq!(
+        back.get("counters")
+            .unwrap()
+            .get("it_obs_steps_total")
+            .unwrap()
+            .as_f64(),
+        Some(4.0)
+    );
+    let h = back
+        .get("histograms")
+        .unwrap()
+        .get("it_obs_step_seconds")
+        .unwrap();
+    assert_eq!(h.get("count").unwrap().as_f64(), Some(2.0));
+
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("# TYPE it_obs_step_seconds histogram"), "{prom}");
+    assert!(prom.contains("it_obs_step_seconds_bucket{le=\"+Inf\"} 2"), "{prom}");
+    assert!(prom.contains("it_obs_steps_total 4"), "{prom}");
+}
+
+#[test]
+fn ns_inverse_emits_convergence_trail_when_enabled() {
+    let _g = lock();
+    obs::set_enabled(true);
+    let before = events_in("nystrom").len();
+    let mut rng = skyformer::util::rng::Rng::new(3);
+    let x = skyformer::linalg::Matrix::randn(&mut rng, 24, 6, 0.5);
+    let gram = skyformer::nystrom::kernel_matrix(skyformer::nystrom::Kernel::Gaussian, &x, &x);
+    let _ = skyformer::linalg::solve::ns_inverse(&gram, 1e-3, 8);
+    let evs = events_in("nystrom");
+    let iters: Vec<_> = evs[before..]
+        .iter()
+        .filter(|e| e.name == "ns_iter")
+        .collect();
+    assert_eq!(iters.len(), 8);
+    // residuals decrease over the iteration (convergent input)
+    let res = |e: &&obs::TraceEvent| {
+        e.args
+            .as_ref()
+            .unwrap()
+            .get("residual")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    assert!(res(&iters[7]) < res(&iters[0]), "no convergence trail");
+    // per-iteration residuals also land in the histogram
+    match metrics::snapshot().metrics.get("ns_iter_residual") {
+        Some(metrics::Metric::Histogram(h)) => assert!(h.count >= 8),
+        other => panic!("expected ns_iter_residual histogram, got {other:?}"),
+    }
+}
+
+#[test]
+fn dump_prefix_writes_consistent_fileset() {
+    let _g = lock();
+    obs::set_enabled(true);
+    {
+        let _s = obs::span("it_dump", "scope");
+    }
+    metrics::gauge_set("it_dump_gauge", 2.5);
+    let dir = std::env::temp_dir().join("skyformer_obs_it_dump");
+    let prefix = dir.join("run").to_string_lossy().into_owned();
+    let paths = obs::dump(&prefix).unwrap();
+    assert_eq!(paths.len(), 4);
+    let trace = std::fs::read_to_string(&paths[0]).unwrap();
+    let doc = json::parse(&trace).unwrap();
+    assert!(doc
+        .get("traceEvents")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .any(|e| e.get("cat").unwrap().as_str() == Some("it_dump")));
+    let prom = std::fs::read_to_string(&paths[3]).unwrap();
+    assert!(prom.contains("it_dump_gauge 2.5"), "{prom}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -257,6 +257,43 @@ fn prop_json_roundtrip_fuzz() {
 }
 
 #[test]
+fn prop_prometheus_names_always_escape_cleanly() {
+    // any metric name — control chars, unicode, quotes, leading digits —
+    // must sanitise onto [a-zA-Z_:][a-zA-Z0-9_:]* and export as parseable
+    // exposition lines
+    forall(60, |rng| {
+        let len = 1 + rng.below(24);
+        let name: String = (0..len)
+            .map(|_| char::from_u32(rng.below(0x250) as u32).unwrap_or('\u{fffd}'))
+            .collect();
+        let sane = skyformer::obs::metrics::sanitize_name(&name);
+        let mut chars = sane.chars();
+        let first = chars.next().ok_or("sanitized name is empty")?;
+        check(
+            first.is_ascii_alphabetic() || first == '_' || first == ':',
+            || format!("bad first char in {sane:?} (from {name:?})"),
+        )?;
+        for c in chars {
+            check(c.is_ascii_alphanumeric() || c == '_' || c == ':', || {
+                format!("bad char {c:?} in {sane:?} (from {name:?})")
+            })?;
+        }
+        // the exported line must carry the sanitised name and no raw newline
+        let mut reg = skyformer::obs::Registry::default();
+        reg.metrics
+            .insert(name.clone(), skyformer::obs::Metric::Counter(1));
+        let text = reg.to_prometheus();
+        check(text.contains(&format!("{sane} 1")), || {
+            format!("export missing sanitised line for {name:?}: {text}")
+        })?;
+        check(
+            text.lines().all(|l| l.starts_with("# TYPE") || l.ends_with(" 1")),
+            || format!("unexpected exposition line for {name:?}: {text}"),
+        )
+    });
+}
+
+#[test]
 fn prop_rng_split_streams_uncorrelated() {
     forall(10, |rng| {
         let base = Rng::new(rng.next_u64());

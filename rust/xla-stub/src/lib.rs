@@ -1,0 +1,274 @@
+//! Offline stand-in for the `xla` (xla_extension 0.5.1) bindings.
+//!
+//! Mirrors exactly the API surface `skyformer::runtime` consumes, so the
+//! `pjrt` feature type-checks without the PJRT shared library.  Host-side
+//! `Literal` construction and round-tripping is fully functional; anything
+//! that would need a real device client ([`PjRtClient::cpu`],
+//! [`HloModuleProto::from_text_file`]) returns a descriptive [`Error`] at
+//! runtime, which the coordinator surfaces as "artifacts unavailable" and
+//! every bench/test skips gracefully.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the reason the PJRT path is unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable in this build (offline xla stub; \
+         link the real xla_extension bindings to execute artifacts)"
+    ))
+}
+
+/// Element types of the artifact signatures (subset of XLA's).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    U32,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn size_bytes(&self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::U8 => 1,
+            ElementType::S64 | ElementType::F64 => 8,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// XLA shape: an array or a tuple of shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host-resident literal (fully functional in the stub).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n * ty.size_bytes() != data.len() {
+            return Err(Error(format!(
+                "literal: {n} x {ty:?} elements != {} bytes",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            shape: ArrayShape {
+                ty,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+            },
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(self.shape.clone()))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.shape.ty != T::TY {
+            return Err(Error(format!(
+                "literal: cannot read {:?} data as {:?}",
+                self.shape.ty,
+                T::TY
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        let n = self.data.len() / size;
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // layout-compatible POD copy (little-endian host, as PJRT CPU uses)
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                n * size,
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error("literal: not a tuple (offline xla stub)".into()))
+    }
+}
+
+/// Device buffer handle (never constructible through the stub client).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Parsed HLO module (text form).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "{}: cannot parse HLO text (offline xla stub)",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+}

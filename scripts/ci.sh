@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Offline CI gate: format, lint, build, test — all without the `pjrt`
+# feature so nothing needs a PJRT plugin or network access.  Run from the
+# repo root:  scripts/ci.sh
+#
+# Pass `--pjrt` to additionally build the PJRT-backed paths (requires the
+# real xla crate to resolve; the default offline build uses the vendored
+# stub in rust/xla-stub).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+WITH_PJRT=0
+for arg in "$@"; do
+    case "$arg" in
+        --pjrt) WITH_PJRT=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
+
+echo "==> cargo fmt --check"
+cargo fmt --all -- --check
+
+echo "==> cargo clippy (offline feature set, warnings are errors)"
+cargo clippy --workspace --no-default-features --all-targets -- -D warnings
+
+echo "==> cargo build (offline feature set)"
+cargo build --workspace --release
+
+echo "==> cargo test (offline feature set)"
+cargo test --workspace --release -q
+
+echo "==> offline benches smoke-run (bench artifact + obs dump path)"
+cargo bench --bench table2_time -- --out /tmp/BENCH_table2.json
+test -s /tmp/BENCH_table2.json
+
+if [ "$WITH_PJRT" = 1 ]; then
+    echo "==> cargo build --features pjrt"
+    cargo build --workspace --release --features pjrt
+    echo "==> cargo test --features pjrt"
+    cargo test --workspace --release --features pjrt -q
+fi
+
+echo "CI OK"
