@@ -6,15 +6,23 @@
 //! layer with tracing *disabled* ≤ 2% (a disabled span is one relaxed
 //! atomic load — measured below, not assumed).
 //!
-//! The batch-generation and span-overhead sections run offline; the
-//! engine-backed sections need `--features pjrt` plus built artifacts.
+//! The batch-generation, span-overhead, and kernel-subsystem sections run
+//! offline; the engine-backed sections need `--features pjrt` plus built
+//! artifacts.  The kernel section compares the naive scalar oracles
+//! against the tiled kernels at 1 thread and at the pool width, and the
+//! series land in a `BENCH_hotpath.json` artifact (override with `--out`).
 
 use std::time::Duration;
 
 use skyformer::data::batch::{Dataset, Split};
+use skyformer::kernels::{self, ops::reference, KernelCtx};
+use skyformer::linalg::Matrix;
 use skyformer::obs;
 use skyformer::runtime::manifest::TaskConfig;
+use skyformer::util::args::Args;
 use skyformer::util::bench::bench;
+use skyformer::util::json::{self, Value};
+use skyformer::util::rng::Rng;
 
 fn listops_task() -> TaskConfig {
     TaskConfig {
@@ -69,7 +77,123 @@ fn main() {
          (target <= 2%); tracing enabled costs {enabled_pct:+.2}% ({recorded} events recorded)"
     );
 
+    let kernel_rows = kernel_sections();
+    let artifact = json::obj(vec![
+        ("bench", json::s("coordinator_hotpath")),
+        ("kernel_rows", Value::Array(kernel_rows)),
+        ("metrics", obs::snapshot().to_json()),
+    ]);
+    let args = Args::from_env();
+    let out_path = args.get_or("out", "BENCH_hotpath.json").to_string();
+    match std::fs::write(&out_path, json::to_string(&artifact)) {
+        Ok(()) => println!("bench artifact written to {out_path}"),
+        Err(e) => eprintln!("coordinator_hotpath: cannot write {out_path}: {e}"),
+    }
+
     engine_sections();
+}
+
+/// Scalar oracle vs tiled kernel (1 thread, then the pool width) on the
+/// attention-sized shapes the coordinator hot path actually runs.  The
+/// 1-thread series isolates tiling+fusion gains; the N-thread series adds
+/// the pool (on a single-core host the two coincide — the speedup column
+/// makes that visible instead of assuming it).
+fn kernel_sections() -> Vec<Value> {
+    let n = 256usize;
+    let p = 32usize;
+    let pool = KernelCtx::global().threads;
+    let mut rng = Rng::new(42);
+    let a = Matrix::randn(&mut rng, n, n, 0.5);
+    let b = Matrix::randn(&mut rng, n, n, 0.5);
+    let q = Matrix::randn(&mut rng, n, p, 0.5);
+    let k = Matrix::randn(&mut rng, n, p, 0.5);
+    let v = Matrix::randn(&mut rng, n, p, 1.0);
+    let s = kernels::matmul_transb(KernelCtx::with_threads(1), &q, &k);
+    let budget = Duration::from_millis(700);
+
+    println!("\nkernel subsystem: scalar oracle vs tiled kernel, n={n} p={p} pool={pool}");
+    let mut rows = Vec::new();
+
+    fn section(
+        rows: &mut Vec<Value>,
+        budget: Duration,
+        pool: usize,
+        kernel: &str,
+        scalar: &mut dyn FnMut(),
+        kernel_1t: &mut dyn FnMut(),
+        kernel_nt: &mut dyn FnMut(),
+    ) {
+        let s_scalar = bench(&format!("{kernel}: scalar reference"), budget, scalar);
+        println!("{s_scalar}");
+        let s_1t = bench(&format!("{kernel}: kernel 1 thread"), budget, kernel_1t);
+        println!("{s_1t}");
+        let s_nt = bench(&format!("{kernel}: kernel {pool} threads"), budget, kernel_nt);
+        println!("{s_nt}");
+        println!(
+            "  {kernel}: kernel/scalar speedup {:.2}x (1t), {:.2}x ({pool}t)",
+            s_scalar.mean.as_secs_f64() / s_1t.mean.as_secs_f64().max(1e-12),
+            s_scalar.mean.as_secs_f64() / s_nt.mean.as_secs_f64().max(1e-12),
+        );
+        for (series, stats) in [("scalar", s_scalar), ("kernel_1t", s_1t), ("kernel_nt", s_nt)] {
+            let threads = if series == "kernel_nt" { pool } else { 1 };
+            let mut row = stats.to_json();
+            if let Value::Object(map) = &mut row {
+                map.insert("kernel".into(), json::s(kernel));
+                map.insert("series".into(), json::s(series));
+                map.insert("threads".into(), json::num(threads as f64));
+            }
+            rows.push(row);
+        }
+    }
+
+    let ctx1 = KernelCtx::with_threads(1);
+    let ctxn = KernelCtx::with_threads(pool);
+    section(
+        &mut rows,
+        budget,
+        pool,
+        "matmul",
+        &mut || {
+            std::hint::black_box(reference::matmul(&a, &b));
+        },
+        &mut || {
+            std::hint::black_box(kernels::matmul(ctx1, &a, &b));
+        },
+        &mut || {
+            std::hint::black_box(kernels::matmul(ctxn, &a, &b));
+        },
+    );
+    section(
+        &mut rows,
+        budget,
+        pool,
+        "gaussian_scores",
+        &mut || {
+            std::hint::black_box(reference::gaussian_scores(&q, &k));
+        },
+        &mut || {
+            std::hint::black_box(kernels::gaussian_scores(ctx1, &q, &k));
+        },
+        &mut || {
+            std::hint::black_box(kernels::gaussian_scores(ctxn, &q, &k));
+        },
+    );
+    section(
+        &mut rows,
+        budget,
+        pool,
+        "row_softmax_matmul",
+        &mut || {
+            std::hint::black_box(reference::row_softmax_matmul(&s, &v));
+        },
+        &mut || {
+            std::hint::black_box(kernels::row_softmax_matmul(ctx1, &s, &v));
+        },
+        &mut || {
+            std::hint::black_box(kernels::row_softmax_matmul(ctxn, &s, &v));
+        },
+    );
+    rows
 }
 
 #[cfg(not(feature = "pjrt"))]

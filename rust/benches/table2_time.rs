@@ -7,13 +7,21 @@
 //! table2_time` (custom harness — criterion is unavailable offline).
 //!
 //! Always emits a `BENCH_table2.json` artifact (override with `--out`)
-//! carrying the measured rows plus the obs metrics snapshot, so CI can
-//! diff bench runs; without `--features pjrt` the rows are empty but the
-//! artifact is still written.  `--obs-out PREFIX` additionally dumps the
-//! full trace/metrics fileset.
+//! carrying the measured rows, an offline `kernel_compare` section
+//! (scalar oracle vs tiled kernel on attention-sized shapes — the
+//! single-machine analogue of the table's time column), and the obs
+//! metrics snapshot, so CI can diff bench runs; without `--features
+//! pjrt` the trainer rows are empty but the artifact is still written.
+//! `--obs-out PREFIX` additionally dumps the full trace/metrics fileset.
 
+use std::time::Duration;
+
+use skyformer::kernels::{self, ops::reference, KernelCtx};
+use skyformer::linalg::Matrix;
 use skyformer::util::args::Args;
+use skyformer::util::bench::{bench, Stats};
 use skyformer::util::json::{self, Value};
+use skyformer::util::rng::Rng;
 
 fn main() {
     let args = Args::from_env();
@@ -31,6 +39,7 @@ fn main() {
     let artifact = json::obj(vec![
         ("bench", json::s("table2_time")),
         ("rows", Value::Array(rows)),
+        ("kernel_compare", Value::Array(kernel_compare_rows())),
         ("metrics", skyformer::obs::snapshot().to_json()),
     ]);
     let out_path = args.get_or("out", "BENCH_table2.json").to_string();
@@ -45,6 +54,75 @@ fn main() {
             Err(e) => eprintln!("obs: dump failed: {e}"),
         }
     }
+}
+
+/// Offline scalar-vs-kernel comparison on the shapes one attention head
+/// sees (n tokens, p channels): the kernel-subsystem time series CI
+/// tracks alongside the trainer rows.
+fn kernel_compare_rows() -> Vec<Value> {
+    let (n, p) = (128usize, 32usize);
+    let ctx = KernelCtx::global();
+    let mut rng = Rng::new(42);
+    let q = Matrix::randn(&mut rng, n, p, 0.5);
+    let k = Matrix::randn(&mut rng, n, p, 0.5);
+    let v = Matrix::randn(&mut rng, n, p, 1.0);
+    let s = kernels::matmul_transb(KernelCtx::with_threads(1), &q, &k);
+    let budget = Duration::from_millis(300);
+
+    let mut rows = Vec::new();
+    let mut push = |kernel: &'static str, series: &'static str, stats: Stats| {
+        let mut row = stats.to_json();
+        if let Value::Object(map) = &mut row {
+            map.insert("kernel".into(), json::s(kernel));
+            map.insert("series".into(), json::s(series));
+            map.insert("n".into(), json::num(n as f64));
+            map.insert("threads".into(), json::num(ctx.threads as f64));
+        }
+        rows.push(row);
+    };
+    push(
+        "gaussian_scores",
+        "scalar",
+        bench("kernel_compare: gaussian_scores scalar", budget, || {
+            std::hint::black_box(reference::gaussian_scores(&q, &k));
+        }),
+    );
+    push(
+        "gaussian_scores",
+        "kernel",
+        bench("kernel_compare: gaussian_scores kernel", budget, || {
+            std::hint::black_box(kernels::gaussian_scores(ctx, &q, &k));
+        }),
+    );
+    push(
+        "row_softmax_matmul",
+        "scalar",
+        bench("kernel_compare: row_softmax_matmul scalar", budget, || {
+            std::hint::black_box(reference::row_softmax_matmul(&s, &v));
+        }),
+    );
+    push(
+        "row_softmax_matmul",
+        "kernel",
+        bench("kernel_compare: row_softmax_matmul kernel", budget, || {
+            std::hint::black_box(kernels::row_softmax_matmul(ctx, &s, &v));
+        }),
+    );
+    push(
+        "matmul",
+        "scalar",
+        bench("kernel_compare: matmul scalar", budget, || {
+            std::hint::black_box(reference::matmul(&s, &s));
+        }),
+    );
+    push(
+        "matmul",
+        "kernel",
+        bench("kernel_compare: matmul kernel", budget, || {
+            std::hint::black_box(kernels::matmul(ctx, &s, &s));
+        }),
+    );
+    rows
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -7,6 +7,7 @@
 //! parameters are freshly sampled.
 
 use crate::attention::exact::{row_softmax, softmax_attention};
+use crate::kernels::{self, KernelCtx};
 use crate::linalg::Matrix;
 use crate::nystrom::{self, Inverse, Kernel};
 use crate::obs;
@@ -119,15 +120,19 @@ fn normalize_rows_apply(a: &Matrix, v: &Matrix) -> Matrix {
 }
 
 /// Nyströmformer (Xiong et al.): segment-mean landmarks, softmax blocks,
-/// iterative pinv on the (non-PSD) middle block.
+/// iterative pinv on the (non-PSD) middle block.  The n-sized factors go
+/// through the fused kernels: `q lk^T` never materialises a transpose and
+/// the leading `softmax(·) @ rest` never materialises the softmax matrix.
 fn nystromformer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize) -> Matrix {
+    let ctx = KernelCtx::global();
     let lq = segment_means(q, d);
     let lk = segment_means(k, d);
-    let f1 = row_softmax(&q.matmul(&lk.transpose())); // (n, d)
-    let a = row_softmax(&lq.matmul(&lk.transpose())); // (d, d)
-    let f3 = row_softmax(&lq.matmul(&k.transpose())); // (d, m)
+    let a = row_softmax(&kernels::matmul_transb(ctx, &lq, &lk)); // (d, d)
+    let f3 = row_softmax(&kernels::matmul_transb(ctx, &lq, k)); // (d, m)
     let z = hyperpower_pinv(&a, 10);
-    f1.matmul(&z.matmul(&f3.matmul(v)))
+    let rest = z.matmul(&f3.matmul(v)); // (d, dv)
+    let s1 = kernels::matmul_transb(ctx, q, &lk); // (n, d)
+    kernels::row_softmax_matmul(ctx, &s1, &rest)
 }
 
 fn segment_means(x: &Matrix, num: usize) -> Matrix {
@@ -184,7 +189,9 @@ fn linformer(q: &Matrix, k: &Matrix, v: &Matrix, d: usize, rng: &mut Rng) -> Mat
     let f = Matrix::randn(rng, d.min(m), m, scale);
     let ke = e.matmul(k); // (d, p)
     let vf = f.matmul(v); // (d, dv)
-    row_softmax(&q.matmul(&ke.transpose())).matmul(&vf)
+    // structurally plain attention against the compressed keys/values —
+    // reuse the fused softmax(q ke^T) vf path
+    softmax_attention(q, &ke, &vf)
 }
 
 /// Performer / FAVOR+: positive orthogonal random features for SM.

@@ -1,5 +1,10 @@
 //! Exact (quadratic) attention outputs: the targets of the Figure-1 study.
+//!
+//! The quadratic paths run on the fused kernels: `q k^T` via
+//! `matmul_transb` (no materialised transpose) and `softmax(S) V` via
+//! `row_softmax_matmul` (no materialised row-stochastic matrix).
 
+use crate::kernels::{self, KernelCtx};
 use crate::linalg::Matrix;
 use crate::nystrom::{kernel_matrix, Kernel};
 
@@ -23,10 +28,12 @@ pub fn row_softmax(s: &Matrix) -> Matrix {
     out
 }
 
-/// Vanilla self-attention `softmax(q k^T) v` on pre-scaled q/k.
+/// Vanilla self-attention `softmax(q k^T) v` on pre-scaled q/k — the
+/// score matrix is the only n x m intermediate (fused softmax·V).
 pub fn softmax_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
-    let s = q.matmul(&k.transpose());
-    row_softmax(&s).matmul(v)
+    let ctx = KernelCtx::global();
+    let s = kernels::matmul_transb(ctx, q, k);
+    kernels::row_softmax_matmul(ctx, &s, v)
 }
 
 /// Kernelized Attention (paper Eq. 3): `kappa(q, k) v`, no normalisation.

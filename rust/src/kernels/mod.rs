@@ -1,0 +1,156 @@
+//! Native pallas-style kernel subsystem: the tiled parallel compute
+//! layer every dense hot path runs on.
+//!
+//! Three pieces, zero external dependencies:
+//!
+//! * [`pool`] — scoped thread pool (`std::thread::scope`) with
+//!   deterministic row-partitioned scheduling.
+//! * [`tile`] — the single tiling implementation (k-panel reduction in
+//!   strictly increasing order) shared by every matmul-shaped loop.
+//! * [`ops`] — the kernels: [`ops::matmul`], [`ops::matmul_transb`],
+//!   fused [`ops::gaussian_scores`] / [`ops::softmax_scores`], fused
+//!   [`ops::row_softmax_matmul`], and the [`ops::scale_add`] epilogue.
+//!
+//! Routing: `linalg::Matrix::matmul`, the exact-attention paths, the
+//! Figure-1 approximators, and the Nyström PSD-completion assembly all
+//! dispatch through a [`KernelCtx`], which also records per-kernel obs
+//! spans and `kernel_<name>_seconds` / `kernel_<name>_flops` log2
+//! histograms (see OBSERVABILITY.md).
+//!
+//! **Determinism contract** (KERNELS.md): output rows are partitioned
+//! contiguously by `(rows, threads)` alone, each row is written by
+//! exactly one thread, and every reduction runs in increasing-k order —
+//! so results are *bit-identical* for every thread count, and identical
+//! to the naive scalar oracles in [`ops::reference`].  `scripts/ci.sh`
+//! enforces this by diffing `skyformer kernels --digest` output across
+//! thread counts and running the test suite under
+//! `SKYFORMER_THREADS=1` and `=4`.
+//!
+//! Knobs: `SKYFORMER_THREADS=N` (env) and `--threads N` (CLI, wins)
+//! pick the pool width; the default is `available_parallelism`.  Jobs
+//! below [`PAR_MIN_FLOPS`] nominal flops run inline on the caller.
+
+pub mod ops;
+pub mod pool;
+pub mod tile;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::linalg::Matrix;
+
+pub use ops::{gaussian_scores, matmul, matmul_transb, row_softmax_matmul, scale_add, softmax_scores};
+
+/// Below this nominal flop count a kernel runs inline on the caller
+/// thread — spawning scoped threads costs more than the work saves.
+pub const PAR_MIN_FLOPS: f64 = 4e6;
+
+/// Dispatch context for the kernel layer: how wide the pool is.
+///
+/// [`KernelCtx::global`] reads the process-wide setting (`--threads` >
+/// `SKYFORMER_THREADS` > `available_parallelism`); tests and benches pin
+/// an explicit width with [`KernelCtx::with_threads`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCtx {
+    pub threads: usize,
+}
+
+impl KernelCtx {
+    /// The process-wide context (see [`current_threads`]).
+    pub fn global() -> KernelCtx {
+        KernelCtx { threads: current_threads() }
+    }
+
+    /// A context pinned to exactly `n` threads (clamped to >= 1).
+    pub fn with_threads(n: usize) -> KernelCtx {
+        KernelCtx { threads: n.max(1) }
+    }
+
+    /// Threads actually used for a job of `flops` nominal work — 1 for
+    /// jobs below [`PAR_MIN_FLOPS`], the pool width otherwise.
+    pub fn threads_for(&self, flops: f64) -> usize {
+        if flops < PAR_MIN_FLOPS {
+            1
+        } else {
+            self.threads
+        }
+    }
+}
+
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SKYFORMER_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// The pool width [`KernelCtx::global`] resolves to right now:
+/// the [`set_threads`] override if one was made, else `SKYFORMER_THREADS`
+/// from the environment, else `available_parallelism`.
+pub fn current_threads() -> usize {
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => env_threads(),
+        n => n,
+    }
+}
+
+/// Override the pool width process-wide (the `--threads` CLI knob).
+/// Clamped to >= 1; takes effect for every subsequent kernel call.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Order-sensitive FNV-1a digest of a matrix's exact bit pattern — the
+/// currency of the CI determinism check (`skyformer kernels --digest`):
+/// two runs diverge in any bit of any kernel output iff digests differ.
+pub fn digest(m: &Matrix) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = (h ^ m.rows as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    h = (h ^ m.cols as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    for x in &m.data {
+        h = (h ^ x.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn with_threads_clamps_to_one() {
+        assert_eq!(KernelCtx::with_threads(0).threads, 1);
+        assert_eq!(KernelCtx::with_threads(6).threads, 6);
+    }
+
+    #[test]
+    fn small_jobs_run_inline() {
+        let ctx = KernelCtx::with_threads(8);
+        assert_eq!(ctx.threads_for(10.0), 1);
+        assert_eq!(ctx.threads_for(PAR_MIN_FLOPS), 8);
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(&mut rng, 8, 8, 1.0);
+        assert_eq!(digest(&a), digest(&a.clone()));
+        let mut b = a.clone();
+        b.data[17] += 1e-7;
+        assert_ne!(digest(&a), digest(&b));
+        // shape participates even when data is empty
+        assert_ne!(digest(&Matrix::zeros(2, 3)), digest(&Matrix::zeros(3, 2)));
+    }
+
+    #[test]
+    fn global_ctx_has_at_least_one_thread() {
+        assert!(KernelCtx::global().threads >= 1);
+    }
+}

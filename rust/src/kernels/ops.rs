@@ -1,0 +1,481 @@
+//! Tiled parallel kernels over the dense [`Matrix`] substrate.
+//!
+//! Every kernel: (1) partitions output rows across the scoped pool
+//! ([`crate::kernels::pool`]), (2) reduces through the shared tile
+//! helpers ([`crate::kernels::tile`]) so there is exactly one tiling
+//! implementation in the crate, and (3) records an obs span plus
+//! `kernel_<name>_seconds` / `kernel_<name>_flops` log2 histograms.
+//!
+//! The fused kernels never materialise an intermediate beyond their
+//! output: [`gaussian_scores`] builds `exp(q_i . k_j - ||q_i||^2/2 -
+//! ||k_j||^2/2)` from precomputed row norms and a dot-product tile
+//! (the distance matrix is never formed), and [`row_softmax_matmul`]
+//! folds the row-stochastic softmax of a score matrix directly into the
+//! `· V` accumulation (the softmaxed matrix is never formed).
+//!
+//! [`reference`] carries independent naive implementations — the scalar
+//! oracles the parity property-tests and benches compare against.
+
+use crate::kernels::{pool, tile, KernelCtx};
+use crate::linalg::Matrix;
+use crate::obs;
+
+/// Record span + duration/FLOP histograms around one kernel invocation.
+/// Metric names are static so the hot path never formats strings.
+fn observed<R>(
+    name: &'static str,
+    seconds_metric: &'static str,
+    flops_metric: &'static str,
+    flops: f64,
+    f: impl FnOnce() -> R,
+) -> R {
+    let _span = obs::span("kernel", name);
+    let t = std::time::Instant::now();
+    let out = f();
+    obs::observe(seconds_metric, t.elapsed().as_secs_f64());
+    obs::observe(flops_metric, flops);
+    out
+}
+
+/// `a @ b` — cache-blocked over k-panels, rows split across the pool.
+pub fn matmul(ctx: KernelCtx, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    observed("matmul", "kernel_matmul_seconds", "kernel_matmul_flops", flops, || {
+        let mut out = Matrix::zeros(m, n);
+        pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+            // k-panel outer, rows inner: the B panel stays hot across
+            // this chunk's rows, same schedule as the serial path
+            let mut kk = 0;
+            while kk < k {
+                let k_end = (kk + tile::TILE_K).min(k);
+                for (r, out_row) in chunk.chunks_mut(n).enumerate() {
+                    tile::matmul_row_panel(out_row, a.row(first_row + r), &b.data, n, kk, k_end);
+                }
+                kk = k_end;
+            }
+        });
+        out
+    })
+}
+
+/// `a @ b^T` without materialising the transpose — both operands are
+/// walked with unit stride (row · row dot products).
+pub fn matmul_transb(ctx: KernelCtx, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols, b.cols,
+        "matmul_transb shape mismatch: {}x{} @ ({}x{})^T",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, n) = (a.rows, b.rows);
+    let flops = 2.0 * m as f64 * a.cols as f64 * n as f64;
+    observed(
+        "matmul_transb",
+        "kernel_matmul_transb_seconds",
+        "kernel_matmul_transb_flops",
+        flops,
+        || {
+            let mut out = Matrix::zeros(m, n);
+            pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+                for (r, out_row) in chunk.chunks_mut(n).enumerate() {
+                    let a_row = a.row(first_row + r);
+                    for (j, o) in out_row.iter_mut().enumerate() {
+                        *o = tile::dot(a_row, b.row(j));
+                    }
+                }
+            });
+            out
+        },
+    )
+}
+
+/// Which exponential score the fused kernel assembles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ScoreEpilogue {
+    /// `exp(-||a_i - b_j||^2 / 2)` via `exp(dot - na_i - nb_j)`.
+    Gaussian,
+    /// `exp(a_i . b_j)` — the softmax (SM) kernel.
+    Softmax,
+}
+
+fn scores(
+    ctx: KernelCtx,
+    a: &Matrix,
+    b: &Matrix,
+    epilogue: ScoreEpilogue,
+    name: &'static str,
+    seconds_metric: &'static str,
+    flops_metric: &'static str,
+) -> Matrix {
+    assert_eq!(
+        a.cols, b.cols,
+        "{name} shape mismatch: {}x{} vs {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, n, p) = (a.rows, b.rows, a.cols);
+    let flops = m as f64 * n as f64 * (2.0 * p as f64 + 3.0);
+    observed(name, seconds_metric, flops_metric, flops, || {
+        // row norms once — O((m + n) p), the only non-output storage
+        let (na, nb) = match epilogue {
+            ScoreEpilogue::Gaussian => (
+                (0..m).map(|i| tile::half_sq_norm(a.row(i))).collect::<Vec<f32>>(),
+                (0..n).map(|j| tile::half_sq_norm(b.row(j))).collect::<Vec<f32>>(),
+            ),
+            ScoreEpilogue::Softmax => (Vec::new(), Vec::new()),
+        };
+        let mut out = Matrix::zeros(m, n);
+        pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+            for (r, out_row) in chunk.chunks_mut(n).enumerate() {
+                let i = first_row + r;
+                let a_row = a.row(i);
+                // dot-product tile, then the exp epilogue over the tile —
+                // the n x n dot/distance matrix is never materialised
+                let mut j0 = 0;
+                while j0 < n {
+                    let j_end = (j0 + tile::TILE_K).min(n);
+                    let mut dots = [0.0f32; tile::TILE_K];
+                    for (t, j) in (j0..j_end).enumerate() {
+                        dots[t] = tile::dot(a_row, b.row(j));
+                    }
+                    match epilogue {
+                        ScoreEpilogue::Gaussian => {
+                            for (t, j) in (j0..j_end).enumerate() {
+                                out_row[j] = (dots[t] - na[i] - nb[j]).exp();
+                            }
+                        }
+                        ScoreEpilogue::Softmax => {
+                            for (t, j) in (j0..j_end).enumerate() {
+                                out_row[j] = dots[t].exp();
+                            }
+                        }
+                    }
+                    j0 = j_end;
+                }
+            }
+        });
+        out
+    })
+}
+
+/// Fused Gaussian-kernel score matrix `exp(-||a_i - b_j||^2 / 2)` on
+/// pre-scaled inputs, assembled tile-by-tile from row norms and dot
+/// products (paper Eq. 2; the L1 Pallas kernel's native twin).
+pub fn gaussian_scores(ctx: KernelCtx, a: &Matrix, b: &Matrix) -> Matrix {
+    scores(
+        ctx,
+        a,
+        b,
+        ScoreEpilogue::Gaussian,
+        "gaussian_scores",
+        "kernel_gaussian_scores_seconds",
+        "kernel_gaussian_scores_flops",
+    )
+}
+
+/// Fused softmax-kernel score matrix `exp(a_i . b_j)` (paper's SM kernel).
+pub fn softmax_scores(ctx: KernelCtx, a: &Matrix, b: &Matrix) -> Matrix {
+    scores(
+        ctx,
+        a,
+        b,
+        ScoreEpilogue::Softmax,
+        "softmax_scores",
+        "kernel_softmax_scores_seconds",
+        "kernel_softmax_scores_flops",
+    )
+}
+
+/// Fused `softmax(s) @ v` — row-stable softmax folded into the `· V`
+/// accumulation; the row-stochastic matrix is never materialised (one
+/// `s.cols`-long scratch row per pool chunk).
+pub fn row_softmax_matmul(ctx: KernelCtx, s: &Matrix, v: &Matrix) -> Matrix {
+    assert_eq!(
+        s.cols, v.rows,
+        "row_softmax_matmul shape mismatch: softmax({}x{}) @ {}x{}",
+        s.rows, s.cols, v.rows, v.cols
+    );
+    let (m, l, dv) = (s.rows, s.cols, v.cols);
+    let flops = m as f64 * l as f64 * (2.0 * dv as f64 + 4.0);
+    observed(
+        "row_softmax_matmul",
+        "kernel_row_softmax_matmul_seconds",
+        "kernel_row_softmax_matmul_flops",
+        flops,
+        || {
+            let mut out = Matrix::zeros(m, dv);
+            pool::run_rows(ctx.threads_for(flops), m, dv, &mut out.data, |first_row, chunk| {
+                let mut w = vec![0.0f32; l];
+                for (r, out_row) in chunk.chunks_mut(dv).enumerate() {
+                    let s_row = s.row(first_row + r);
+                    let max = s_row.iter().fold(f32::NEG_INFINITY, |acc, &x| acc.max(x));
+                    let mut sum = 0.0f32;
+                    for (wl, &x) in w.iter_mut().zip(s_row) {
+                        *wl = (x - max).exp();
+                        sum += *wl;
+                    }
+                    let inv = 1.0 / sum.max(1e-30);
+                    for (lx, &wl) in w.iter().enumerate() {
+                        let v_row = v.row(lx);
+                        for (o, &vv) in out_row.iter_mut().zip(v_row) {
+                            *o += wl * vv;
+                        }
+                    }
+                    for o in out_row.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            });
+            out
+        },
+    )
+}
+
+/// Elementwise epilogue `alpha * a + beta * b` (the Newton–Schulz
+/// `cI - AZ` updates run through this instead of scale+sub pairs).
+pub fn scale_add(ctx: KernelCtx, a: &Matrix, alpha: f32, b: &Matrix, beta: f32) -> Matrix {
+    assert_eq!(
+        (a.rows, a.cols),
+        (b.rows, b.cols),
+        "scale_add shape mismatch: {}x{} vs {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, n) = (a.rows, a.cols);
+    let flops = 3.0 * m as f64 * n as f64;
+    observed("scale_add", "kernel_scale_add_seconds", "kernel_scale_add_flops", flops, || {
+        let mut out = Matrix::zeros(m, n);
+        pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+            let base = first_row * n;
+            for (t, o) in chunk.iter_mut().enumerate() {
+                *o = alpha * a.data[base + t] + beta * b.data[base + t];
+            }
+        });
+        out
+    })
+}
+
+/// Independent naive implementations — the scalar oracles for the parity
+/// property-tests and the scalar series in the benches.  Reductions run
+/// in the same increasing-k order the tiled kernels use, which is what
+/// makes bit-exact parity a checkable contract rather than a tolerance.
+pub mod reference {
+    use crate::linalg::Matrix;
+
+    pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f32;
+                for kx in 0..a.cols {
+                    acc += a[(i, kx)] * b[(kx, j)];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn matmul_transb(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols);
+        let mut out = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                let mut acc = 0.0f32;
+                for kx in 0..a.cols {
+                    acc += a[(i, kx)] * b[(j, kx)];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn gaussian_scores(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols);
+        let half = |row: &[f32]| {
+            let mut acc = 0.0f32;
+            for v in row {
+                acc += v * v;
+            }
+            0.5 * acc
+        };
+        let na: Vec<f32> = (0..a.rows).map(|i| half(a.row(i))).collect();
+        let nb: Vec<f32> = (0..b.rows).map(|j| half(b.row(j))).collect();
+        let mut out = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                let mut d = 0.0f32;
+                for kx in 0..a.cols {
+                    d += a[(i, kx)] * b[(j, kx)];
+                }
+                out[(i, j)] = (d - na[i] - nb[j]).exp();
+            }
+        }
+        out
+    }
+
+    pub fn softmax_scores(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols);
+        let mut out = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                let mut d = 0.0f32;
+                for kx in 0..a.cols {
+                    d += a[(i, kx)] * b[(j, kx)];
+                }
+                out[(i, j)] = d.exp();
+            }
+        }
+        out
+    }
+
+    pub fn row_softmax_matmul(s: &Matrix, v: &Matrix) -> Matrix {
+        assert_eq!(s.cols, v.rows);
+        let mut out = Matrix::zeros(s.rows, v.cols);
+        for i in 0..s.rows {
+            let s_row = s.row(i);
+            let max = s_row.iter().fold(f32::NEG_INFINITY, |acc, &x| acc.max(x));
+            let mut w = vec![0.0f32; s.cols];
+            let mut sum = 0.0f32;
+            for (wl, &x) in w.iter_mut().zip(s_row) {
+                *wl = (x - max).exp();
+                sum += *wl;
+            }
+            let inv = 1.0 / sum.max(1e-30);
+            for (lx, &wl) in w.iter().enumerate() {
+                for j in 0..v.cols {
+                    out[(i, j)] += wl * v[(lx, j)];
+                }
+            }
+            for j in 0..v.cols {
+                out[(i, j)] *= inv;
+            }
+        }
+        out
+    }
+
+    pub fn scale_add(a: &Matrix, alpha: f32, b: &Matrix, beta: f32) -> Matrix {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        Matrix::from_fn(a.rows, a.cols, |i, j| alpha * a[(i, j)] + beta * b[(i, j)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+        a.rows == b.rows
+            && a.cols == b.cols
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn matmul_matches_reference_bitwise_across_threads() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 65, 3), (64, 64, 64), (33, 129, 17)] {
+            let a = Matrix::randn(&mut rng, m, k, 1.0);
+            let b = Matrix::randn(&mut rng, k, n, 1.0);
+            let want = reference::matmul(&a, &b);
+            for threads in [1usize, 2, 5] {
+                let got = matmul(KernelCtx::with_threads(threads), &a, &b);
+                assert!(bits_equal(&want, &got), "{m}x{k}x{n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_transb_matches_plain_matmul_of_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(&mut rng, 13, 9, 1.0);
+        let b = Matrix::randn(&mut rng, 11, 9, 1.0);
+        let got = matmul_transb(KernelCtx::with_threads(3), &a, &b);
+        let want = reference::matmul_transb(&a, &b);
+        assert!(bits_equal(&want, &got));
+        // and within rounding of the unfused composition
+        let composed = reference::matmul(&a, &b.transpose());
+        assert!(got.sub(&composed).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn gaussian_scores_matches_reference_bitwise() {
+        let mut rng = Rng::new(2);
+        for &(m, n, p) in &[(1usize, 1usize, 4usize), (20, 31, 8), (65, 64, 16)] {
+            let a = Matrix::randn(&mut rng, m, p, 0.5);
+            let b = Matrix::randn(&mut rng, n, p, 0.5);
+            let want = reference::gaussian_scores(&a, &b);
+            for threads in [1usize, 4] {
+                let got = gaussian_scores(KernelCtx::with_threads(threads), &a, &b);
+                assert!(bits_equal(&want, &got), "{m}x{n}x{p} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_scores_diag_is_one_and_in_unit_interval() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(&mut rng, 18, 6, 0.7);
+        let c = gaussian_scores(KernelCtx::with_threads(2), &a, &a);
+        for i in 0..18 {
+            assert!((c[(i, i)] - 1.0).abs() < 1e-5);
+            for j in 0..18 {
+                assert!(c[(i, j)] > 0.0 && c[(i, j)] <= 1.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_scores_matches_reference_bitwise() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(&mut rng, 9, 5, 0.5);
+        let b = Matrix::randn(&mut rng, 14, 5, 0.5);
+        let want = reference::softmax_scores(&a, &b);
+        let got = softmax_scores(KernelCtx::with_threads(3), &a, &b);
+        assert!(bits_equal(&want, &got));
+    }
+
+    #[test]
+    fn row_softmax_matmul_matches_reference_bitwise_and_composition() {
+        let mut rng = Rng::new(5);
+        let s = Matrix::randn(&mut rng, 23, 17, 1.0);
+        let v = Matrix::randn(&mut rng, 17, 7, 1.0);
+        let want = reference::row_softmax_matmul(&s, &v);
+        for threads in [1usize, 4] {
+            let got = row_softmax_matmul(KernelCtx::with_threads(threads), &s, &v);
+            assert!(bits_equal(&want, &got), "threads={threads}");
+        }
+        // vs the unfused softmax-then-matmul composition: equal to rounding
+        let composed =
+            reference::matmul(&crate::attention::exact::row_softmax(&s), &v);
+        let got = row_softmax_matmul(KernelCtx::with_threads(2), &s, &v);
+        assert!(got.sub(&composed).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn scale_add_matches_reference() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(&mut rng, 12, 5, 1.0);
+        let b = Matrix::randn(&mut rng, 12, 5, 1.0);
+        let got = scale_add(KernelCtx::with_threads(3), &a, 2.5, &b, -1.0);
+        let want = reference::scale_add(&a, 2.5, &b, -1.0);
+        assert!(bits_equal(&want, &got));
+    }
+
+    #[test]
+    fn empty_shapes_do_not_panic() {
+        let a = Matrix::zeros(0, 4);
+        let b = Matrix::zeros(4, 3);
+        let c = matmul(KernelCtx::with_threads(4), &a, &b);
+        assert_eq!((c.rows, c.cols), (0, 3));
+        let d = Matrix::zeros(5, 0);
+        let e = matmul(KernelCtx::with_threads(2), &d, &Matrix::zeros(0, 2));
+        assert_eq!((e.rows, e.cols), (5, 2));
+        assert!(e.data.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,109 @@
+//! Scoped thread pool with deterministic row-partitioned scheduling.
+//!
+//! Every parallel kernel splits its *output* rows into at most `threads`
+//! contiguous chunks and hands each chunk to one scoped thread
+//! (`std::thread::scope` — no worker daemons, no unsafe lifetime
+//! erasure).  The partition depends only on `(rows, threads)`, never on
+//! timing, and each output row is written by exactly one thread, so the
+//! bytes produced are identical for every thread count (see KERNELS.md,
+//! "Determinism contract").
+//!
+//! Spawning is cheap relative to the O(n^3)/O(n^2 p) work the kernels
+//! ship per call; callers still skip the pool entirely below a work
+//! threshold (see [`crate::kernels::ops`]).
+
+/// Run `f` over the rows of `out` (a `rows * row_len` row-major buffer),
+/// split into at most `threads` contiguous row chunks.
+///
+/// `f(first_row, chunk)` receives the global index of its first row and
+/// the mutable slice holding rows `first_row .. first_row + chunk_rows`.
+/// With `threads == 1` this is a plain inline call — the scalar path and
+/// the parallel path are the same code.
+pub fn run_rows<F>(threads: usize, rows: usize, row_len: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_len);
+    if rows == 0 || row_len == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, rows);
+    if threads == 1 {
+        f(0, out);
+        return;
+    }
+    // ceil split: the first chunks carry one extra row when rows % threads != 0
+    let rows_per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (t, chunk) in out.chunks_mut(rows_per * row_len).enumerate() {
+            s.spawn(move || f(t * rows_per, chunk));
+        }
+    });
+}
+
+/// The deterministic row partition [`run_rows`] uses, as `(first, len)`
+/// pairs — exposed so tests and docs can state the schedule exactly.
+pub fn partition(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, rows);
+    let rows_per = rows.div_ceil(threads);
+    let mut out = Vec::new();
+    let mut first = 0;
+    while first < rows {
+        let len = rows_per.min(rows - first);
+        out.push((first, len));
+        first += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_rows_exactly_once() {
+        for rows in [1usize, 2, 3, 7, 63, 64, 65, 100] {
+            for threads in [1usize, 2, 3, 4, 7, 16] {
+                let parts = partition(rows, threads);
+                assert!(parts.len() <= threads.min(rows), "{rows}/{threads}");
+                let mut next = 0;
+                for &(first, len) in &parts {
+                    assert_eq!(first, next);
+                    assert!(len > 0);
+                    next += len;
+                }
+                assert_eq!(next, rows, "{rows}/{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_rows_writes_every_row_with_its_global_index() {
+        for threads in [1usize, 2, 3, 5] {
+            let (rows, row_len) = (11usize, 4usize);
+            let mut out = vec![0.0f32; rows * row_len];
+            run_rows(threads, rows, row_len, &mut out, |first_row, chunk| {
+                for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                    for x in row.iter_mut() {
+                        *x = (first_row + r) as f32;
+                    }
+                }
+            });
+            for i in 0..rows {
+                for j in 0..row_len {
+                    assert_eq!(out[i * row_len + j], i as f32, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_rows_empty_is_noop() {
+        let mut out: Vec<f32> = Vec::new();
+        run_rows(4, 0, 8, &mut out, |_, _| panic!("must not run"));
+    }
+}

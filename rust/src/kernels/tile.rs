@@ -1,0 +1,118 @@
+//! The one tiling implementation every dense kernel shares.
+//!
+//! All matmul-shaped loops in the crate — `Matrix::matmul`, the fused
+//! score kernels, the softmax·V epilogue — reduce over `k` in strictly
+//! increasing order, blocked in [`TILE_K`]-wide panels for cache reuse.
+//! Blocking never reorders the reduction (a k-panel is a contiguous,
+//! in-order slice of it), so the tiled result is bit-identical to a
+//! naive `for k in 0..k` accumulation.  That single invariant is what
+//! makes the scalar path, the 1-thread kernel path, and the N-thread
+//! kernel path produce the same bytes.
+
+/// Reduction panel width (f32 elements). 64 keeps a `TILE_K x n` panel
+/// of the B operand inside L1/L2 for the Figure-1 sizes (n <= 1024).
+pub const TILE_K: usize = 64;
+
+/// `out_row[j] += sum_{kx in kk..k_end} a_row[kx] * b[kx * n + j]`
+/// for every `j` — one output row, one k-panel, unit stride on both
+/// operands (ikj order).
+#[inline]
+pub fn matmul_row_panel(
+    out_row: &mut [f32],
+    a_row: &[f32],
+    b: &[f32],
+    n: usize,
+    kk: usize,
+    k_end: usize,
+) {
+    for kx in kk..k_end {
+        let a = a_row[kx];
+        let b_row = &b[kx * n..kx * n + n];
+        for (o, &bv) in out_row.iter_mut().zip(b_row) {
+            *o += a * bv;
+        }
+    }
+}
+
+/// Accumulate one output row against the whole of `b` (`k x n`,
+/// row-major), panel by panel: the remainder panel goes through the same
+/// code path as full panels (`k_end` just stops short).
+#[inline]
+pub fn matmul_row(out_row: &mut [f32], a_row: &[f32], b: &[f32], n: usize, k: usize) {
+    let mut kk = 0;
+    while kk < k {
+        let k_end = (kk + TILE_K).min(k);
+        matmul_row_panel(out_row, a_row, b, n, kk, k_end);
+        kk = k_end;
+    }
+}
+
+/// Dot product reduced in increasing index order — the `matmul_transb` /
+/// score-kernel inner loop, same reduction order as [`matmul_row_panel`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Half squared norm `0.5 * ||x||^2` — the Gaussian-kernel row statistic.
+#[inline]
+pub fn half_sq_norm(x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for v in x {
+        acc += v * v;
+    }
+    0.5 * acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_row(a_row: &[f32], b: &[f32], n: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        for (j, o) in out.iter_mut().enumerate() {
+            for (kx, &av) in a_row.iter().enumerate().take(k) {
+                *o += av * b[kx * n + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn panel_loop_is_bit_identical_to_naive_order() {
+        // sizes straddling the panel boundary, including the remainder path
+        for &k in &[1usize, TILE_K - 1, TILE_K, TILE_K + 1, 3 * TILE_K + 7] {
+            let n = 5;
+            let a_row: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+            let mut out = vec![0.0f32; n];
+            matmul_row(&mut out, &a_row, &b, n, k);
+            let want = naive_row(&a_row, &b, n, k);
+            for j in 0..n {
+                assert_eq!(out[j].to_bits(), want[j].to_bits(), "k={k} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_panel_reduction_order() {
+        let k = TILE_K + 3;
+        let a: Vec<f32> = (0..k).map(|i| (i as f32 * 0.23).sin()).collect();
+        let b: Vec<f32> = (0..k).map(|i| (i as f32 * 0.31).cos()).collect();
+        // dot against a 1-column B must equal matmul_row on the same data
+        let mut out = [0.0f32];
+        matmul_row(&mut out, &a, &b, 1, k);
+        assert_eq!(dot(&a, &b).to_bits(), out[0].to_bits());
+    }
+
+    #[test]
+    fn half_sq_norm_known_value() {
+        assert_eq!(half_sq_norm(&[3.0, 4.0]), 12.5);
+        assert_eq!(half_sq_norm(&[]), 0.0);
+    }
+}

@@ -26,6 +26,15 @@
 //! the paper's matrix-approximation study (Figure 1) and the
 //! property-test suite without any HLO involvement.
 //!
+//! The dense hot paths run on the native pallas-style kernel subsystem
+//! in [`kernels`]: a scoped thread pool with deterministic
+//! row-partitioned scheduling, one shared tiling implementation, and
+//! fused tiled kernels (`matmul`, `matmul_transb`, `gaussian_scores`,
+//! `row_softmax_matmul`, `scale_add`) that `linalg`, `attention`, and
+//! `nystrom` dispatch through a `KernelCtx`.  Results are bit-identical
+//! across thread counts (KERNELS.md); pick the width with
+//! `SKYFORMER_THREADS=N` or `--threads N`.
+//!
 //! Cross-cutting observability lives in [`obs`]: hierarchical span tracing
 //! over the train step → upload/execute/download pipeline and the
 //! Newton–Schulz solve, a global metrics registry (counters, gauges,
@@ -40,6 +49,7 @@
 pub mod attention;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod linalg;
 pub mod nystrom;
 pub mod obs;

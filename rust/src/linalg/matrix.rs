@@ -1,6 +1,8 @@
 //! Row-major dense f32 matrix with the operations the approximation study
-//! needs. The matmul is cache-blocked + ikj-ordered — enough to keep the
-//! Figure-1 sweep (n up to 1024) interactive without BLAS.
+//! needs. The matmul dispatches through the pallas-style kernel subsystem
+//! (`crate::kernels`): cache-blocked, ikj-ordered, row-parallel for large
+//! jobs — enough to keep the Figure-1 sweep (n up to 1024) interactive
+//! without BLAS.
 
 use crate::util::rng::Rng;
 
@@ -94,34 +96,14 @@ impl Matrix {
         out
     }
 
-    /// Cache-blocked matmul, ikj inner order (unit-stride on both operands).
+    /// Matrix product through the kernel subsystem: cache-blocked over
+    /// [`crate::kernels::tile::TILE_K`]-wide k-panels, ikj inner order
+    /// (unit-stride on both operands), rows split across the scoped pool
+    /// for large jobs.  The remainder panel goes through the same tile
+    /// helper as full panels — there is one tiling implementation in the
+    /// crate — and results are bit-identical for every thread count.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(
-            self.cols, other.rows,
-            "matmul shape mismatch: {}x{} @ {}x{}",
-            self.rows, self.cols, other.rows, other.cols
-        );
-        const BLOCK: usize = 64;
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
-        for kk in (0..k).step_by(BLOCK) {
-            let k_end = (kk + BLOCK).min(k);
-            for i in 0..m {
-                let a_row = self.row(i);
-                let out_row = &mut out.data[i * n..(i + 1) * n];
-                for kx in kk..k_end {
-                    let a = a_row[kx];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let b_row = &other.data[kx * n..kx * n + n];
-                    for (o, &b) in out_row.iter_mut().zip(b_row) {
-                        *o += a * b;
-                    }
-                }
-            }
-        }
-        out
+        crate::kernels::matmul(crate::kernels::KernelCtx::global(), self, other)
     }
 
     pub fn add(&self, other: &Matrix) -> Matrix {
@@ -252,6 +234,42 @@ mod tests {
         for &(i, j) in &[(0, 0), (64, 66), (30, 10)] {
             let want: f32 = (0..130).map(|k| a[(i, k)] * b[(k, j)]).sum();
             assert!((c[(i, j)] - want).abs() < 1e-3 * want.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn matmul_tile_boundary_sizes_are_bit_exact_vs_naive() {
+        // regression for the blocked-loop remainder path: every dimension
+        // at 1, TILE-1, TILE, TILE+1 must match a naive increasing-k
+        // accumulation bit-for-bit (the kernel determinism contract)
+        use crate::kernels::tile::TILE_K;
+        let naive = |a: &Matrix, b: &Matrix| -> Matrix {
+            let mut out = Matrix::zeros(a.rows, b.cols);
+            for i in 0..a.rows {
+                for j in 0..b.cols {
+                    let mut acc = 0.0f32;
+                    for kx in 0..a.cols {
+                        acc += a[(i, kx)] * b[(kx, j)];
+                    }
+                    out[(i, j)] = acc;
+                }
+            }
+            out
+        };
+        let sizes = [1usize, TILE_K - 1, TILE_K, TILE_K + 1];
+        let mut rng = Rng::new(7);
+        for &m in &sizes {
+            for &k in &sizes {
+                for &n in &[1usize, TILE_K + 1] {
+                    let a = Matrix::randn(&mut rng, m, k, 1.0);
+                    let b = Matrix::randn(&mut rng, k, n, 1.0);
+                    let got = a.matmul(&b);
+                    let want = naive(&a, &b);
+                    for (x, y) in got.data.iter().zip(&want.data) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "size {m}x{k}x{n}");
+                    }
+                }
+            }
         }
     }
 

@@ -4,8 +4,13 @@
 //!   division-based" method of the paper's §4.4 discussion; used as the
 //!   oracle the Newton–Schulz iteration is judged against).
 //! * [`ns_inverse`] — the paper's preconditioned Newton–Schulz: the native
-//!   twin of the L1 Pallas kernel, used by the Figure-1 study.
+//!   twin of the L1 Pallas kernel, used by the Figure-1 study.  The
+//!   iteration count is adaptive: the `ns_final_residual` trail showed the
+//!   residual either converges well before the fixed count or hits the f32
+//!   floor and jitters, so the loop stops at [`NS_TOL`] or on the first
+//!   non-improving step ([`ns_inverse_with_stats`] reports which).
 
+use crate::kernels::{self, KernelCtx};
 use crate::linalg::Matrix;
 use crate::obs;
 use crate::util::json;
@@ -78,12 +83,42 @@ pub fn ns_preconditioner(m: &Matrix, gamma: f32) -> (Matrix, Vec<f32>) {
     (m_hat, d_inv_sqrt)
 }
 
+/// Adaptive loop: stop once `||AZ - I||_max` drops to this level —
+/// further order-3 steps only churn f32 noise.
+pub const NS_TOL: f32 = 1e-6;
+
+/// What the adaptive Newton–Schulz loop actually did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NsStats {
+    /// Hyperpower updates applied (<= the `iters` cap).
+    pub iters_run: usize,
+    /// `||AZ - I||_max` of the returned (preconditioned) iterate at the
+    /// last measurement.
+    pub final_residual: f32,
+    /// Stopped because the residual reached [`NS_TOL`].
+    pub converged: bool,
+    /// Stopped because the residual stopped improving (f32 floor or
+    /// divergence); the previous — at least as good — iterate is kept.
+    pub stalled: bool,
+}
+
 /// Preconditioned Newton–Schulz approximation of `(M + gamma I)^{-1}`
 /// (paper §4.4): the order-3 hyperpower iteration
 /// `Z <- 1/4 Z (13 I - A Z (15 I - A Z (7 I - A Z)))`, seeded with
-/// `Z0 = A^T / (||A||_1 ||A||_inf)`.
+/// `Z0 = A^T / (||A||_1 ||A||_inf)`.  `iters` caps the loop; the
+/// residual trail stops it early on convergence or stall (see
+/// [`ns_inverse_with_stats`] for the outcome).
 pub fn ns_inverse(m: &Matrix, gamma: f32, iters: usize) -> Matrix {
+    ns_inverse_with_stats(m, gamma, iters).0
+}
+
+/// [`ns_inverse`] plus the adaptive-stopping diagnostics.  The stop rule
+/// depends only on the input data (never on timing), so iteration counts
+/// — like the kernel outputs themselves — are identical across thread
+/// counts.
+pub fn ns_inverse_with_stats(m: &Matrix, gamma: f32, iters: usize) -> (Matrix, NsStats) {
     let _span = obs::span("nystrom", "ns_inverse");
+    let ctx = KernelCtx::global();
     let n = m.rows;
     let (a, d_inv_sqrt) = ns_preconditioner(m, gamma);
     let eye = Matrix::eye(n);
@@ -96,13 +131,27 @@ pub fn ns_inverse(m: &Matrix, gamma: f32, iters: usize) -> Matrix {
         .fold(0.0f32, f32::max);
     let mut z = a.transpose().scale(1.0 / (norm1 * norminf).max(1e-30));
 
-    let mut residual = f32::NAN;
+    let mut stats = NsStats {
+        iters_run: 0,
+        final_residual: f32::INFINITY,
+        converged: false,
+        stalled: false,
+    };
+    let mut prev_residual = f32::INFINITY;
+    let mut prev_z: Option<Matrix> = None;
     for iter in 0..iters {
         let az = a.matmul(&z);
-        // convergence diagnostic ||AZ - I||_max — az is already in hand,
-        // so this is one cheap pass; only taken when tracing is on
+        // residual of the *current* iterate, ||AZ - I||_max — az is in
+        // hand, so this is one cheap O(n^2) pass per O(n^3) step
+        let mut residual = 0.0f32;
+        for i in 0..n {
+            for (j, &v) in az.row(i).iter().enumerate() {
+                let d = if i == j { v - 1.0 } else { v };
+                residual = residual.max(d.abs());
+            }
+        }
+        obs::observe("ns_iter_residual", residual as f64);
         if obs::enabled() {
-            residual = az.sub(&eye).max_abs();
             obs::event(
                 "nystrom",
                 "ns_iter",
@@ -111,18 +160,40 @@ pub fn ns_inverse(m: &Matrix, gamma: f32, iters: usize) -> Matrix {
                     ("residual", json::num(residual as f64)),
                 ])),
             );
-            obs::observe("ns_iter_residual", residual as f64);
         }
-        let t1 = eye.scale(7.0).sub(&az);
-        let t2 = eye.scale(15.0).sub(&az.matmul(&t1));
-        let t3 = eye.scale(13.0).sub(&az.matmul(&t2));
+        stats.final_residual = residual;
+        if residual <= NS_TOL {
+            stats.converged = true;
+            break;
+        }
+        if !residual.is_finite() || residual >= prev_residual {
+            // f32 floor reached (or diverging): the previous iterate was
+            // at least as good — roll back and stop
+            stats.stalled = true;
+            if let Some(prev) = prev_z {
+                z = prev;
+                stats.final_residual = prev_residual;
+            }
+            break;
+        }
+        prev_residual = residual;
+        prev_z = Some(z.clone());
+        let t1 = kernels::scale_add(ctx, &eye, 7.0, &az, -1.0);
+        let t2 = kernels::scale_add(ctx, &eye, 15.0, &az.matmul(&t1), -1.0);
+        let t3 = kernels::scale_add(ctx, &eye, 13.0, &az.matmul(&t2), -1.0);
         z = z.matmul(&t3).scale(0.25);
+        stats.iters_run = iter + 1;
     }
-    if obs::enabled() && residual.is_finite() {
-        obs::gauge_set("ns_final_residual", residual as f64);
+    if stats.final_residual.is_finite() {
+        obs::gauge_set("ns_final_residual", stats.final_residual as f64);
+    }
+    obs::gauge_set("ns_iters_used", stats.iters_run as f64);
+    if stats.converged || stats.stalled {
+        obs::counter_add("ns_early_stops_total", 1);
     }
     // undo preconditioning: (M+gI)^{-1} = D^{-1/2} Z D^{-1/2}
-    Matrix::from_fn(n, n, |i, j| d_inv_sqrt[i] * z[(i, j)] * d_inv_sqrt[j])
+    let inv = Matrix::from_fn(n, n, |i, j| d_inv_sqrt[i] * z[(i, j)] * d_inv_sqrt[j]);
+    (inv, stats)
 }
 
 #[cfg(test)]
@@ -168,6 +239,48 @@ mod tests {
         let scale = exact.max_abs();
         let err = exact.sub(&approx).max_abs() / scale;
         assert!(err < 2e-3, "relative err {err}");
+    }
+
+    #[test]
+    fn ns_stops_early_on_well_conditioned_gram() {
+        // order-3 convergence on a preconditioned kernel Gram is fast:
+        // the loop must hit NS_TOL or the f32 floor long before the cap,
+        // and the result must still match the exact inverse
+        let m = gaussian_gram(6, 32, 8);
+        let gamma = 1e-3;
+        let (approx, stats) = ns_inverse_with_stats(&m, gamma, 1000);
+        assert!(
+            stats.converged || stats.stalled,
+            "no early stop in 1000 iters: {stats:?}"
+        );
+        assert!(stats.iters_run < 100, "iters_run {}", stats.iters_run);
+        let exact = gauss_jordan_inverse(&m.add_diag(gamma)).unwrap();
+        let err = exact.sub(&approx).max_abs() / exact.max_abs();
+        assert!(err < 2e-3, "relative err {err}");
+    }
+
+    #[test]
+    fn ns_adaptive_matches_or_beats_fixed_count() {
+        // the adaptive loop must be at least as accurate as the old fixed
+        // 30-iteration run (it only ever stops at the tolerance or keeps
+        // the best iterate seen)
+        let m = gaussian_gram(7, 24, 6);
+        let gamma = 1e-3;
+        let (_, stats) = ns_inverse_with_stats(&m, gamma, 30);
+        assert!(
+            stats.final_residual <= NS_TOL || stats.stalled || stats.iters_run == 30,
+            "loop exited without a recorded reason: {stats:?}"
+        );
+        assert!(stats.final_residual.is_finite());
+    }
+
+    #[test]
+    fn ns_cap_of_zero_returns_seed() {
+        let m = gaussian_gram(8, 16, 4);
+        let (z, stats) = ns_inverse_with_stats(&m, 1e-3, 0);
+        assert_eq!(stats.iters_run, 0);
+        assert!(!stats.converged && !stats.stalled);
+        assert!(z.is_finite());
     }
 
     #[test]

@@ -24,8 +24,9 @@ use skyformer::coordinator::trainer::{TrainConfig, Trainer};
 #[cfg(feature = "pjrt")]
 use skyformer::data::batch::Split;
 #[cfg(feature = "pjrt")]
-use skyformer::linalg::{svd, Matrix};
-use skyformer::linalg::norms;
+use skyformer::linalg::svd;
+use skyformer::kernels::{self, KernelCtx};
+use skyformer::linalg::{norms, Matrix};
 #[cfg(feature = "pjrt")]
 use skyformer::report::tables::{fmt_bytes, fmt_secs};
 use skyformer::report::tables::Table;
@@ -37,6 +38,14 @@ use skyformer::Result;
 
 fn main() {
     let args = Args::from_env();
+    match args.get_usize("threads", 0) {
+        Ok(0) => {}
+        Ok(n) => kernels::set_threads(n),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
     let env_prefix = skyformer::obs::init_from_env();
     let obs_out = args.get("obs-out").map(|s| s.to_string()).or(env_prefix);
     if obs_out.is_some() {
@@ -73,6 +82,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         #[cfg(feature = "pjrt")]
         "sweep" => sweep(args),
         "approx" => approx(args),
+        "kernels" => kernels_cmd(args),
         #[cfg(feature = "pjrt")]
         "instability" => instability(args),
         #[cfg(feature = "pjrt")]
@@ -104,19 +114,106 @@ COMMANDS
   approx        Figure 1: spectral-norm error vs #features
                   [--n 256] [--features 16,32,64,128,256]
                   [--regimes init,pretrained] [--trials 3]
+  kernels       exercise the native kernel subsystem on seeded inputs
+                  [--n 96] [--p 16] [--seed 42]
+                  [--digest]  print only `name digest` lines (stdout) for
+                              the CI cross-thread determinism diff
   instability   Table 3: 20-step instability-score ratios vs self-attention
                   --task listops [--attentions kernelized,skyformer,nystromformer]
   svd           Figure 4: singular-value decay of attention output
                   --task listops --attention softmax [--steps 100]
 GLOBAL
   --artifacts DIR   artifact directory (default: artifacts)
+  --threads N       kernel pool width (wins over SKYFORMER_THREADS; the
+                    determinism contract makes outputs bit-identical for
+                    every N)
   --obs-out PREFIX  dump observability sinks on exit: PREFIX.trace.json
                     (chrome://tracing), PREFIX.events.jsonl,
                     PREFIX.metrics.json, PREFIX.metrics.prom; implies tracing
 ENV
   SKYFORMER_TRACE=1        enable span tracing
   SKYFORMER_OBS_OUT=PREFIX same as --obs-out (flag wins)
+  SKYFORMER_THREADS=N      kernel pool width (default: available cores)
 "#;
+
+/// `skyformer kernels`: run every kernel on seeded inputs and report
+/// bit-pattern digests plus parity against the scalar oracles.  With
+/// `--digest`, only `name digest` lines go to stdout (config goes to
+/// stderr) so CI can diff runs at different `--threads` byte-for-byte.
+fn kernels_cmd(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 96)?;
+    let p = args.get_usize("p", 16)?;
+    let ctx = KernelCtx::global();
+    eprintln!("kernels: n={n} p={p} threads={}", ctx.threads);
+
+    let mut rng = Rng::new(args.get_u64("seed", 42)?);
+    let a = Matrix::randn(&mut rng, n, n, 0.5);
+    let b = Matrix::randn(&mut rng, n, n, 0.5);
+    let q = Matrix::randn(&mut rng, n, p, 0.5);
+    let k = Matrix::randn(&mut rng, n, p, 0.5);
+    let v = Matrix::randn(&mut rng, n, p, 1.0);
+    let s = kernels::matmul_transb(ctx, &q, &k);
+
+    use skyformer::kernels::ops::reference;
+    let outs: Vec<(&str, Matrix, Matrix)> = vec![
+        ("matmul", kernels::matmul(ctx, &a, &b), reference::matmul(&a, &b)),
+        (
+            "matmul_transb",
+            kernels::matmul_transb(ctx, &a, &b),
+            reference::matmul_transb(&a, &b),
+        ),
+        (
+            "gaussian_scores",
+            kernels::gaussian_scores(ctx, &q, &k),
+            reference::gaussian_scores(&q, &k),
+        ),
+        (
+            "softmax_scores",
+            kernels::softmax_scores(ctx, &q, &k),
+            reference::softmax_scores(&q, &k),
+        ),
+        (
+            "row_softmax_matmul",
+            kernels::row_softmax_matmul(ctx, &s, &v),
+            reference::row_softmax_matmul(&s, &v),
+        ),
+        (
+            "scale_add",
+            kernels::scale_add(ctx, &a, 7.0, &b, -1.0),
+            reference::scale_add(&a, 7.0, &b, -1.0),
+        ),
+    ];
+
+    if args.get_bool("digest") {
+        for (name, out, _) in &outs {
+            println!("{name} {:016x}", kernels::digest(out));
+        }
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        &format!("Kernel subsystem: n={n} p={p} threads={}", ctx.threads),
+        &["kernel", "shape", "digest", "scalar parity"],
+    );
+    let mut all_exact = true;
+    for (name, out, want) in &outs {
+        let exact = kernels::digest(out) == kernels::digest(want);
+        all_exact &= exact;
+        t.row(vec![
+            name.to_string(),
+            format!("{}x{}", out.rows, out.cols),
+            format!("{:016x}", kernels::digest(out)),
+            if exact { "bit-exact".into() } else { "DIVERGED".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    if !all_exact {
+        return Err(skyformer::Error::Config(
+            "kernel output diverged from the scalar oracle".into(),
+        ));
+    }
+    Ok(())
+}
 
 #[cfg(feature = "pjrt")]
 fn info(args: &Args) -> Result<()> {

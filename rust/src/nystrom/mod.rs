@@ -44,22 +44,16 @@ impl Kernel {
     }
 }
 
-/// Empirical kernel matrix `phi(a_i, b_j)`.
+/// Empirical kernel matrix `phi(a_i, b_j)` through the fused score
+/// kernels: the exp(dot [- norms]) epilogue is applied tile-by-tile, so
+/// no `A B^T` intermediate is materialised beyond the output — the same
+/// fusion the L1 Pallas kernel performs on-accelerator.
 pub fn kernel_matrix(kernel: Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.cols);
-    // matmul form: exp(A B^T [- norms]) — same hot loop as the Pallas kernel
-    let g = a.matmul(&b.transpose());
+    let ctx = crate::kernels::KernelCtx::global();
     match kernel {
-        Kernel::Softmax => Matrix::from_fn(a.rows, b.rows, |i, j| g[(i, j)].exp()),
-        Kernel::Gaussian => {
-            let na: Vec<f32> = (0..a.rows)
-                .map(|i| 0.5 * a.row(i).iter().map(|x| x * x).sum::<f32>())
-                .collect();
-            let nb: Vec<f32> = (0..b.rows)
-                .map(|j| 0.5 * b.row(j).iter().map(|x| x * x).sum::<f32>())
-                .collect();
-            Matrix::from_fn(a.rows, b.rows, |i, j| (g[(i, j)] - na[i] - nb[j]).exp())
-        }
+        Kernel::Softmax => crate::kernels::softmax_scores(ctx, a, b),
+        Kernel::Gaussian => crate::kernels::gaussian_scores(ctx, a, b),
     }
 }
 

@@ -5,6 +5,7 @@
 //! RNG-derived cases and reports the failing case seed.
 
 use skyformer::data::batch::{Dataset, Split};
+use skyformer::kernels::{self, ops::reference, KernelCtx};
 use skyformer::linalg::{norms, solve, svd, Matrix};
 use skyformer::nystrom::{self, Inverse, Kernel};
 use skyformer::runtime::manifest::TaskConfig;
@@ -92,6 +93,69 @@ fn prop_gauss_jordan_left_and_right_inverse() {
         let e1 = m.matmul(&inv).sub(&eye).max_abs();
         let e2 = inv.matmul(&m).sub(&eye).max_abs();
         check(e1 < 1e-2 && e2 < 1e-2, || format!("inverse errors {e1} {e2}"))
+    });
+}
+
+// ---------------------------------------------------------------- kernels
+
+/// The kernel determinism contract, as a property: every fused parallel
+/// kernel is *bit-identical* to the naive scalar oracle at any thread
+/// count, over random shapes (including tile-remainder and empty edges).
+fn bits_match(got: &Matrix, want: &Matrix, what: &str) -> std::result::Result<(), String> {
+    check(
+        (got.rows, got.cols) == (want.rows, want.cols),
+        || format!("{what}: shape {}x{} vs {}x{}", got.rows, got.cols, want.rows, want.cols),
+    )?;
+    for (idx, (x, y)) in got.data.iter().zip(&want.data).enumerate() {
+        check(x.to_bits() == y.to_bits(), || {
+            format!("{what}: bit mismatch at flat index {idx}: {x} vs {y}")
+        })?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_matmul_parallel_bit_exact_vs_scalar_reference() {
+    forall(15, |rng| {
+        let (m, k, n) = (rng.below(80), rng.below(80), rng.below(40));
+        let a = Matrix::randn(rng, m, k, 1.0);
+        let b = Matrix::randn(rng, k, n, 1.0);
+        let want = reference::matmul(&a, &b);
+        for threads in [1usize, 2, 4] {
+            let got = kernels::matmul(KernelCtx::with_threads(threads), &a, &b);
+            bits_match(&got, &want, &format!("matmul {m}x{k}x{n} @{threads}t"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gaussian_scores_parallel_bit_exact_vs_scalar_reference() {
+    forall(15, |rng| {
+        let (m, n, p) = (rng.below(70), rng.below(70), 1 + rng.below(16));
+        let a = Matrix::randn(rng, m, p, 0.6);
+        let b = Matrix::randn(rng, n, p, 0.6);
+        let want = reference::gaussian_scores(&a, &b);
+        for threads in [1usize, 4] {
+            let got = kernels::gaussian_scores(KernelCtx::with_threads(threads), &a, &b);
+            bits_match(&got, &want, &format!("gaussian_scores {m}x{n}x{p} @{threads}t"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_row_softmax_matmul_parallel_bit_exact_vs_scalar_reference() {
+    forall(15, |rng| {
+        let (m, l, n) = (rng.below(60), 1 + rng.below(60), 1 + rng.below(24));
+        let s = Matrix::randn(rng, m, l, 2.0);
+        let v = Matrix::randn(rng, l, n, 1.0);
+        let want = reference::row_softmax_matmul(&s, &v);
+        for threads in [1usize, 4] {
+            let got = kernels::row_softmax_matmul(KernelCtx::with_threads(threads), &s, &v);
+            bits_match(&got, &want, &format!("row_softmax_matmul {m}x{l}x{n} @{threads}t"))?;
+        }
+        Ok(())
     });
 }
 

@@ -26,8 +26,21 @@ cargo clippy --workspace --no-default-features --all-targets -- -D warnings
 echo "==> cargo build (offline feature set)"
 cargo build --workspace --release
 
-echo "==> cargo test (offline feature set)"
-cargo test --workspace --release -q
+echo "==> cargo test (offline feature set, SKYFORMER_THREADS=1)"
+SKYFORMER_THREADS=1 cargo test --workspace --release -q
+
+echo "==> cargo test (offline feature set, SKYFORMER_THREADS=4)"
+SKYFORMER_THREADS=4 cargo test --workspace --release -q
+
+echo "==> kernel determinism: digests must match across thread counts"
+DIG1=$(target/release/skyformer kernels --digest --threads 1)
+DIG4=$(target/release/skyformer kernels --digest --threads 4)
+if [ "$DIG1" != "$DIG4" ]; then
+    echo "kernel digests diverged between --threads 1 and --threads 4:" >&2
+    diff <(echo "$DIG1") <(echo "$DIG4") >&2 || true
+    exit 1
+fi
+echo "    $(echo "$DIG1" | wc -l | tr -d ' ') kernels bit-identical"
 
 echo "==> offline benches smoke-run (bench artifact + obs dump path)"
 cargo bench --bench table2_time -- --out /tmp/BENCH_table2.json
