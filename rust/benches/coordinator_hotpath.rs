@@ -15,7 +15,8 @@
 use std::time::Duration;
 
 use skyformer::data::batch::{Dataset, Split};
-use skyformer::kernels::{self, ops::reference, KernelCtx};
+use skyformer::kernels::{self, ops::reference, pool, KernelCtx};
+use skyformer::linalg::solve;
 use skyformer::linalg::Matrix;
 use skyformer::obs;
 use skyformer::runtime::manifest::TaskConfig;
@@ -77,7 +78,8 @@ fn main() {
          (target <= 2%); tracing enabled costs {enabled_pct:+.2}% ({recorded} events recorded)"
     );
 
-    let kernel_rows = kernel_sections();
+    let mut kernel_rows = kernel_sections();
+    kernel_rows.extend(pool_sections());
     let artifact = json::obj(vec![
         ("bench", json::s("coordinator_hotpath")),
         ("kernel_rows", Value::Array(kernel_rows)),
@@ -193,6 +195,55 @@ fn kernel_sections() -> Vec<Value> {
             std::hint::black_box(kernels::row_softmax_matmul(ctxn, &s, &v));
         },
     );
+    rows
+}
+
+/// Scoped vs pinned pool backend on the two workloads the pool refactor
+/// targets: one large matmul (per-call spawn cost amortised — pinned must
+/// be no slower) and a Newton–Schulz iteration at d=128, a series of many
+/// small back-to-back matmuls where per-call thread spawning dominates
+/// the scoped backend (pinned should win).  On a single-core host both
+/// modes inline and the series coincide — the printed ratio makes that
+/// visible instead of assuming it.
+fn pool_sections() -> Vec<Value> {
+    let pool_width = KernelCtx::global().threads;
+    let budget = Duration::from_millis(700);
+    let mut rng = Rng::new(7);
+    let a = Matrix::randn(&mut rng, 256, 256, 0.5);
+    let b = Matrix::randn(&mut rng, 256, 256, 0.5);
+    // A 128x128 Gaussian kernel gram: positive definite, so ns_inverse
+    // converges, and each internal matmul (2*128^3 flops) just clears the
+    // parallel threshold — the pool engages on every small step.
+    let x = Matrix::randn(&mut rng, 128, 32, 0.3);
+    let gram = kernels::gaussian_scores(KernelCtx::with_threads(1), &x, &x);
+
+    println!("\npool backend: scoped vs pinned, width={pool_width}");
+    let mut rows = Vec::new();
+    let saved = pool::current_mode();
+    for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+        let ctx = KernelCtx::with_threads(pool_width).with_mode(mode);
+        let s_mm = bench(&format!("pool_matmul_256: {} backend", mode.name()), budget, || {
+            std::hint::black_box(kernels::matmul(ctx, &a, &b));
+        });
+        println!("{s_mm}");
+        // ns_inverse reads KernelCtx::global() internally; steer it via
+        // the process-wide mode override and restore below.
+        pool::set_mode(mode);
+        let s_ns = bench(&format!("pool_ns_series_128: {} backend", mode.name()), budget, || {
+            std::hint::black_box(solve::ns_inverse(&gram, 1e-3, 8));
+        });
+        println!("{s_ns}");
+        for (kernel, stats) in [("pool_matmul_256", s_mm), ("pool_ns_series_128", s_ns)] {
+            let mut row = stats.to_json();
+            if let Value::Object(map) = &mut row {
+                map.insert("kernel".into(), json::s(kernel));
+                map.insert("series".into(), json::s(mode.name()));
+                map.insert("threads".into(), json::num(pool_width as f64));
+            }
+            rows.push(row);
+        }
+    }
+    pool::set_mode(saved);
     rows
 }
 

@@ -3,13 +3,16 @@
 //!
 //! Three pieces, zero external dependencies:
 //!
-//! * [`pool`] — scoped thread pool (`std::thread::scope`) with
-//!   deterministic row-partitioned scheduling.
-//! * [`tile`] — the single tiling implementation (k-panel reduction in
-//!   strictly increasing order) shared by every matmul-shaped loop.
-//! * [`ops`] — the kernels: [`ops::matmul`], [`ops::matmul_transb`],
-//!   fused [`ops::gaussian_scores`] / [`ops::softmax_scores`], fused
-//!   [`ops::row_softmax_matmul`], and the [`ops::scale_add`] epilogue.
+//! * [`pool`] — deterministic row-partitioned scheduling over two
+//!   backends: a pinned persistent worker pool (parked between calls,
+//!   the default) and a scoped-spawn fallback (`SKYFORMER_POOL`).
+//! * [`tile`] — the single tiling implementation (k-panel blocking,
+//!   [`tile::LANES`]-wide accumulator blocks, fixed reduction order)
+//!   shared by every matmul-shaped loop.
+//! * [`ops`] — the kernels: [`ops::matmul`], [`ops::matmul_transa`],
+//!   [`ops::matmul_transb`], fused [`ops::gaussian_scores`] /
+//!   [`ops::softmax_scores`], fused [`ops::row_softmax_matmul`], and
+//!   the [`ops::scale_add`] epilogue.
 //!
 //! Routing: `linalg::Matrix::matmul`, the exact-attention paths, the
 //! Figure-1 approximators, and the Nyström PSD-completion assembly all
@@ -19,16 +22,21 @@
 //!
 //! **Determinism contract** (KERNELS.md): output rows are partitioned
 //! contiguously by `(rows, threads)` alone, each row is written by
-//! exactly one thread, and every reduction runs in increasing-k order —
-//! so results are *bit-identical* for every thread count, and identical
-//! to the naive scalar oracles in [`ops::reference`].  `scripts/ci.sh`
-//! enforces this by diffing `skyformer kernels --digest` output across
-//! thread counts and running the test suite under
-//! `SKYFORMER_THREADS=1` and `=4`.
+//! exactly one executor, and every reduction runs in a fixed order
+//! (increasing-k per element; the [`tile::LANES`] lane order for
+//! dot-shaped reductions) — so results are *bit-identical* for every
+//! thread count **and both pool modes**, and identical to the naive
+//! scalar oracles in [`ops::reference`].  `scripts/ci.sh` enforces this
+//! by diffing `skyformer kernels --digest` output across thread counts
+//! × pool modes against the committed golden fixture
+//! (`rust/tests/golden/kernels.digest`) and running the test suite
+//! under both modes.
 //!
 //! Knobs: `SKYFORMER_THREADS=N` (env) and `--threads N` (CLI, wins)
-//! pick the pool width; the default is `available_parallelism`.  Jobs
-//! below [`PAR_MIN_FLOPS`] nominal flops run inline on the caller.
+//! pick the pool width; the default is `available_parallelism`.
+//! `SKYFORMER_POOL=scoped|pinned` (env) and `--pool` (CLI, wins) pick
+//! the backend.  Jobs below [`PAR_MIN_FLOPS`] nominal flops run inline
+//! on the caller.
 
 pub mod ops;
 pub mod pool;
@@ -38,32 +46,47 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 use crate::linalg::Matrix;
+use crate::util::rng::Rng;
 
-pub use ops::{gaussian_scores, matmul, matmul_transb, row_softmax_matmul, scale_add, softmax_scores};
+pub use ops::{
+    gaussian_scores, matmul, matmul_transa, matmul_transb, row_softmax_matmul, scale_add,
+    softmax_scores,
+};
 
 /// Below this nominal flop count a kernel runs inline on the caller
 /// thread — spawning scoped threads costs more than the work saves.
 pub const PAR_MIN_FLOPS: f64 = 4e6;
 
-/// Dispatch context for the kernel layer: how wide the pool is.
+/// Dispatch context for the kernel layer: how wide the pool is and
+/// which backend runs it.
 ///
-/// [`KernelCtx::global`] reads the process-wide setting (`--threads` >
-/// `SKYFORMER_THREADS` > `available_parallelism`); tests and benches pin
-/// an explicit width with [`KernelCtx::with_threads`].
+/// [`KernelCtx::global`] reads the process-wide settings (`--threads` >
+/// `SKYFORMER_THREADS` > `available_parallelism`; `--pool` >
+/// `SKYFORMER_POOL` > pinned); tests and benches pin an explicit width
+/// with [`KernelCtx::with_threads`] and a backend with
+/// [`KernelCtx::with_mode`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KernelCtx {
     pub threads: usize,
+    pub mode: pool::Mode,
 }
 
 impl KernelCtx {
-    /// The process-wide context (see [`current_threads`]).
+    /// The process-wide context (see [`current_threads`] and
+    /// [`pool::current_mode`]).
     pub fn global() -> KernelCtx {
-        KernelCtx { threads: current_threads() }
+        KernelCtx { threads: current_threads(), mode: pool::current_mode() }
     }
 
-    /// A context pinned to exactly `n` threads (clamped to >= 1).
+    /// A context pinned to exactly `n` threads (clamped to >= 1), using
+    /// the process-wide pool mode.
     pub fn with_threads(n: usize) -> KernelCtx {
-        KernelCtx { threads: n.max(1) }
+        KernelCtx { threads: n.max(1), mode: pool::current_mode() }
+    }
+
+    /// The same context pinned to an explicit pool backend.
+    pub fn with_mode(self, mode: pool::Mode) -> KernelCtx {
+        KernelCtx { mode, ..self }
     }
 
     /// Threads actually used for a job of `flops` nominal work — 1 for
@@ -119,6 +142,58 @@ pub fn digest(m: &Matrix) -> u64 {
     h
 }
 
+/// The fixed digest workload behind `skyformer kernels` and the golden
+/// fixture `rust/tests/golden/kernels.digest`: every kernel run once on
+/// seeded inputs, paired with its [`ops::reference`] oracle output.
+///
+/// CLI and integration tests share this factory so the fixture can
+/// never drift from what the binary prints.
+pub fn digest_suite(
+    ctx: KernelCtx,
+    n: usize,
+    p: usize,
+    seed: u64,
+) -> Vec<(&'static str, Matrix, Matrix)> {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::randn(&mut rng, n, n, 0.5);
+    let b = Matrix::randn(&mut rng, n, n, 0.5);
+    let q = Matrix::randn(&mut rng, n, p, 0.5);
+    let k = Matrix::randn(&mut rng, n, p, 0.5);
+    let v = Matrix::randn(&mut rng, n, p, 1.0);
+    let s = ops::matmul_transb(ctx, &q, &k);
+
+    use ops::reference;
+    vec![
+        ("matmul", ops::matmul(ctx, &a, &b), reference::matmul(&a, &b)),
+        ("matmul_transa", ops::matmul_transa(ctx, &a, &b), reference::matmul_transa(&a, &b)),
+        (
+            "matmul_transb",
+            ops::matmul_transb(ctx, &a, &b),
+            reference::matmul_transb(&a, &b),
+        ),
+        (
+            "gaussian_scores",
+            ops::gaussian_scores(ctx, &q, &k),
+            reference::gaussian_scores(&q, &k),
+        ),
+        (
+            "softmax_scores",
+            ops::softmax_scores(ctx, &q, &k),
+            reference::softmax_scores(&q, &k),
+        ),
+        (
+            "row_softmax_matmul",
+            ops::row_softmax_matmul(ctx, &s, &v),
+            reference::row_softmax_matmul(&s, &v),
+        ),
+        (
+            "scale_add",
+            ops::scale_add(ctx, &a, 7.0, &b, -1.0),
+            reference::scale_add(&a, 7.0, &b, -1.0),
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +227,33 @@ mod tests {
     #[test]
     fn global_ctx_has_at_least_one_thread() {
         assert!(KernelCtx::global().threads >= 1);
+    }
+
+    #[test]
+    fn digest_suite_matches_reference_in_both_modes() {
+        // small shapes keep this fast; the CLI/golden fixture runs the
+        // full n=96 suite
+        let mut want: Option<Vec<(&'static str, u64)>> = None;
+        for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+            for threads in [1usize, 4] {
+                let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+                let suite = digest_suite(ctx, 24, 8, 7);
+                let got: Vec<(&'static str, u64)> = suite
+                    .iter()
+                    .map(|(name, out, reference)| {
+                        assert_eq!(
+                            digest(out),
+                            digest(reference),
+                            "{name} diverged from its scalar oracle ({mode:?}, {threads} threads)"
+                        );
+                        (*name, digest(out))
+                    })
+                    .collect();
+                match &want {
+                    None => want = Some(got),
+                    Some(w) => assert_eq!(w, &got, "{mode:?} x {threads} threads diverged"),
+                }
+            }
+        }
     }
 }

@@ -1,8 +1,9 @@
 //! Tiled parallel kernels over the dense [`Matrix`] substrate.
 //!
-//! Every kernel: (1) partitions output rows across the scoped pool
-//! ([`crate::kernels::pool`]), (2) reduces through the shared tile
-//! helpers ([`crate::kernels::tile`]) so there is exactly one tiling
+//! Every kernel: (1) partitions output rows across the worker pool
+//! ([`crate::kernels::pool`] — pinned or scoped, per the `KernelCtx`
+//! mode), (2) reduces through the shared tile helpers
+//! ([`crate::kernels::tile`]) so there is exactly one tiling
 //! implementation in the crate, and (3) records an obs span plus
 //! `kernel_<name>_seconds` / `kernel_<name>_flops` log2 histograms.
 //!
@@ -47,8 +48,9 @@ pub fn matmul(ctx: KernelCtx, a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let flops = 2.0 * m as f64 * k as f64 * n as f64;
     observed("matmul", "kernel_matmul_seconds", "kernel_matmul_flops", flops, || {
+        let threads = ctx.threads_for(flops);
         let mut out = Matrix::zeros(m, n);
-        pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+        pool::run_rows_in(ctx.mode, threads, m, n, &mut out.data, |first_row, chunk| {
             // k-panel outer, rows inner: the B panel stays hot across
             // this chunk's rows, same schedule as the serial path
             let mut kk = 0;
@@ -80,13 +82,51 @@ pub fn matmul_transb(ctx: KernelCtx, a: &Matrix, b: &Matrix) -> Matrix {
         "kernel_matmul_transb_flops",
         flops,
         || {
+            let threads = ctx.threads_for(flops);
             let mut out = Matrix::zeros(m, n);
-            pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+            pool::run_rows_in(ctx.mode, threads, m, n, &mut out.data, |first_row, chunk| {
                 for (r, out_row) in chunk.chunks_mut(n).enumerate() {
                     let a_row = a.row(first_row + r);
                     for (j, o) in out_row.iter_mut().enumerate() {
                         *o = tile::dot(a_row, b.row(j));
                     }
+                }
+            });
+            out
+        },
+    )
+}
+
+/// `a^T @ b` without materialising the transpose: output row `i` is the
+/// reduction of A's *column* `i` against the rows of `b`.  Each output
+/// row gathers its O(k) column into a per-chunk scratch and reduces
+/// through the shared tile helpers, so the per-element order is one add
+/// per `r` in increasing order — **bit-identical** to
+/// `matmul(ctx, &a.transpose(), b)` with no (k x m) transposed copy.
+pub fn matmul_transa(ctx: KernelCtx, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.rows, b.rows,
+        "matmul_transa shape mismatch: ({}x{})^T @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, k, n) = (a.cols, a.rows, b.cols);
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    observed(
+        "matmul_transa",
+        "kernel_matmul_transa_seconds",
+        "kernel_matmul_transa_flops",
+        flops,
+        || {
+            let threads = ctx.threads_for(flops);
+            let mut out = Matrix::zeros(m, n);
+            pool::run_rows_in(ctx.mode, threads, m, n, &mut out.data, |first_row, chunk| {
+                let mut col = vec![0.0f32; k];
+                for (r, out_row) in chunk.chunks_mut(n).enumerate() {
+                    let i = first_row + r;
+                    for (rr, c) in col.iter_mut().enumerate() {
+                        *c = a.data[rr * a.cols + i];
+                    }
+                    tile::matmul_row(out_row, &col, &b.data, n, k);
                 }
             });
             out
@@ -128,8 +168,9 @@ fn scores(
             ),
             ScoreEpilogue::Softmax => (Vec::new(), Vec::new()),
         };
+        let threads = ctx.threads_for(flops);
         let mut out = Matrix::zeros(m, n);
-        pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+        pool::run_rows_in(ctx.mode, threads, m, n, &mut out.data, |first_row, chunk| {
             for (r, out_row) in chunk.chunks_mut(n).enumerate() {
                 let i = first_row + r;
                 let a_row = a.row(i);
@@ -207,8 +248,9 @@ pub fn row_softmax_matmul(ctx: KernelCtx, s: &Matrix, v: &Matrix) -> Matrix {
         "kernel_row_softmax_matmul_flops",
         flops,
         || {
+            let threads = ctx.threads_for(flops);
             let mut out = Matrix::zeros(m, dv);
-            pool::run_rows(ctx.threads_for(flops), m, dv, &mut out.data, |first_row, chunk| {
+            pool::run_rows_in(ctx.mode, threads, m, dv, &mut out.data, |first_row, chunk| {
                 let mut w = vec![0.0f32; l];
                 for (r, out_row) in chunk.chunks_mut(dv).enumerate() {
                     let s_row = s.row(first_row + r);
@@ -247,8 +289,9 @@ pub fn scale_add(ctx: KernelCtx, a: &Matrix, alpha: f32, b: &Matrix, beta: f32) 
     let (m, n) = (a.rows, a.cols);
     let flops = 3.0 * m as f64 * n as f64;
     observed("scale_add", "kernel_scale_add_seconds", "kernel_scale_add_flops", flops, || {
+        let threads = ctx.threads_for(flops);
         let mut out = Matrix::zeros(m, n);
-        pool::run_rows(ctx.threads_for(flops), m, n, &mut out.data, |first_row, chunk| {
+        pool::run_rows_in(ctx.mode, threads, m, n, &mut out.data, |first_row, chunk| {
             let base = first_row * n;
             for (t, o) in chunk.iter_mut().enumerate() {
                 *o = alpha * a.data[base + t] + beta * b.data[base + t];
@@ -260,10 +303,33 @@ pub fn scale_add(ctx: KernelCtx, a: &Matrix, alpha: f32, b: &Matrix, beta: f32) 
 
 /// Independent naive implementations — the scalar oracles for the parity
 /// property-tests and the scalar series in the benches.  Reductions run
-/// in the same increasing-k order the tiled kernels use, which is what
-/// makes bit-exact parity a checkable contract rather than a tolerance.
+/// in the contract's fixed order — increasing-k per output element for
+/// the matmul family, the [`crate::kernels::tile::LANES`] lane order for
+/// dot-shaped reductions — which is what makes bit-exact parity a
+/// checkable contract rather than a tolerance.
 pub mod reference {
+    use crate::kernels::tile::LANES;
     use crate::linalg::Matrix;
+
+    /// The contract's fixed lane order, written independently of
+    /// `kernels::tile`: lane `l` accumulates indices congruent to `l`
+    /// (mod [`LANES`]) over the full blocks, lanes combine in
+    /// increasing-lane order, the tail folds in last.
+    fn lane_dot(a: &[f32], b: &[f32]) -> f32 {
+        let full = (a.len() / LANES) * LANES;
+        let mut lanes = [0.0f32; LANES];
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate().take(full) {
+            lanes[i % LANES] += x * y;
+        }
+        let mut total = 0.0f32;
+        for l in lanes {
+            total += l;
+        }
+        for (&x, &y) in a[full..].iter().zip(&b[full..]) {
+            total += x * y;
+        }
+        total
+    }
 
     pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
         assert_eq!(a.cols, b.rows);
@@ -280,14 +346,14 @@ pub mod reference {
         out
     }
 
-    pub fn matmul_transb(a: &Matrix, b: &Matrix) -> Matrix {
-        assert_eq!(a.cols, b.cols);
-        let mut out = Matrix::zeros(a.rows, b.rows);
-        for i in 0..a.rows {
-            for j in 0..b.rows {
+    pub fn matmul_transa(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows, b.rows);
+        let mut out = Matrix::zeros(a.cols, b.cols);
+        for i in 0..a.cols {
+            for j in 0..b.cols {
                 let mut acc = 0.0f32;
-                for kx in 0..a.cols {
-                    acc += a[(i, kx)] * b[(j, kx)];
+                for r in 0..a.rows {
+                    acc += a[(r, i)] * b[(r, j)];
                 }
                 out[(i, j)] = acc;
             }
@@ -295,24 +361,26 @@ pub mod reference {
         out
     }
 
+    pub fn matmul_transb(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols);
+        let mut out = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                out[(i, j)] = lane_dot(a.row(i), b.row(j));
+            }
+        }
+        out
+    }
+
     pub fn gaussian_scores(a: &Matrix, b: &Matrix) -> Matrix {
         assert_eq!(a.cols, b.cols);
-        let half = |row: &[f32]| {
-            let mut acc = 0.0f32;
-            for v in row {
-                acc += v * v;
-            }
-            0.5 * acc
-        };
+        let half = |row: &[f32]| 0.5 * lane_dot(row, row);
         let na: Vec<f32> = (0..a.rows).map(|i| half(a.row(i))).collect();
         let nb: Vec<f32> = (0..b.rows).map(|j| half(b.row(j))).collect();
         let mut out = Matrix::zeros(a.rows, b.rows);
         for i in 0..a.rows {
             for j in 0..b.rows {
-                let mut d = 0.0f32;
-                for kx in 0..a.cols {
-                    d += a[(i, kx)] * b[(j, kx)];
-                }
+                let d = lane_dot(a.row(i), b.row(j));
                 out[(i, j)] = (d - na[i] - nb[j]).exp();
             }
         }
@@ -324,11 +392,7 @@ pub mod reference {
         let mut out = Matrix::zeros(a.rows, b.rows);
         for i in 0..a.rows {
             for j in 0..b.rows {
-                let mut d = 0.0f32;
-                for kx in 0..a.cols {
-                    d += a[(i, kx)] * b[(j, kx)];
-                }
-                out[(i, j)] = d.exp();
+                out[(i, j)] = lane_dot(a.row(i), b.row(j)).exp();
             }
         }
         out
@@ -377,15 +441,18 @@ mod tests {
     }
 
     #[test]
-    fn matmul_matches_reference_bitwise_across_threads() {
+    fn matmul_matches_reference_bitwise_across_threads_and_modes() {
         let mut rng = Rng::new(0);
         for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 65, 3), (64, 64, 64), (33, 129, 17)] {
             let a = Matrix::randn(&mut rng, m, k, 1.0);
             let b = Matrix::randn(&mut rng, k, n, 1.0);
             let want = reference::matmul(&a, &b);
-            for threads in [1usize, 2, 5] {
-                let got = matmul(KernelCtx::with_threads(threads), &a, &b);
-                assert!(bits_equal(&want, &got), "{m}x{k}x{n} threads={threads}");
+            for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+                for threads in [1usize, 2, 5] {
+                    let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+                    let got = matmul(ctx, &a, &b);
+                    assert!(bits_equal(&want, &got), "{m}x{k}x{n} threads={threads} {mode:?}");
+                }
             }
         }
     }
@@ -401,6 +468,37 @@ mod tests {
         // and within rounding of the unfused composition
         let composed = reference::matmul(&a, &b.transpose());
         assert!(got.sub(&composed).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn matmul_transa_matches_reference_bitwise_across_threads_and_modes() {
+        let mut rng = Rng::new(7);
+        for &(k, m, n) in &[(1usize, 1usize, 1usize), (65, 7, 9), (40, 70, 17)] {
+            let a = Matrix::randn(&mut rng, k, m, 1.0); // (k, m): a^T is (m, k)
+            let b = Matrix::randn(&mut rng, k, n, 1.0);
+            let want = reference::matmul_transa(&a, &b);
+            for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+                for threads in [1usize, 3] {
+                    let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+                    let got = matmul_transa(ctx, &a, &b);
+                    assert!(bits_equal(&want, &got), "({k}x{m})^T@{k}x{n} {threads}t {mode:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_transa_is_bit_identical_to_matmul_of_materialised_transpose() {
+        // the transpose-elimination contract: callers may swap
+        // `matmul(&a.transpose(), b)` for `matmul_transa(&a, b)` without
+        // moving a single output bit
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(&mut rng, 33, 21, 1.0);
+        let b = Matrix::randn(&mut rng, 33, 14, 1.0);
+        let ctx = KernelCtx::with_threads(4);
+        let fused = matmul_transa(ctx, &a, &b);
+        let composed = matmul(ctx, &a.transpose(), &b);
+        assert!(bits_equal(&fused, &composed));
     }
 
     #[test]
@@ -451,8 +549,7 @@ mod tests {
             assert!(bits_equal(&want, &got), "threads={threads}");
         }
         // vs the unfused softmax-then-matmul composition: equal to rounding
-        let composed =
-            reference::matmul(&crate::attention::exact::row_softmax(&s), &v);
+        let composed = reference::matmul(&crate::attention::exact::row_softmax(&s), &v);
         let got = row_softmax_matmul(KernelCtx::with_threads(2), &s, &v);
         assert!(got.sub(&composed).max_abs() < 1e-5);
     }
@@ -465,6 +562,43 @@ mod tests {
         let got = scale_add(KernelCtx::with_threads(3), &a, 2.5, &b, -1.0);
         let want = reference::scale_add(&a, 2.5, &b, -1.0);
         assert!(bits_equal(&want, &got));
+    }
+
+    #[test]
+    fn lane_boundary_widths_match_reference_bitwise() {
+        // mirror of the TILE-boundary regression at the LANES boundary:
+        // the accumulator-block column tail (matmul) and the dot lane
+        // tail (matmul_transb) both straddle LANES here
+        use crate::kernels::tile::LANES;
+        let mut rng = Rng::new(10);
+        for &w in &[LANES - 1, LANES, LANES + 1, 2 * LANES + 1] {
+            let a = Matrix::randn(&mut rng, 9, 33, 1.0);
+            let b = Matrix::randn(&mut rng, 33, w, 1.0);
+            let got = matmul(KernelCtx::with_threads(2), &a, &b);
+            assert!(bits_equal(&got, &reference::matmul(&a, &b)), "matmul output width {w}");
+            let a = Matrix::randn(&mut rng, 9, w, 1.0);
+            let b = Matrix::randn(&mut rng, 7, w, 1.0);
+            let got = matmul_transb(KernelCtx::with_threads(2), &a, &b);
+            assert!(
+                bits_equal(&got, &reference::matmul_transb(&a, &b)),
+                "matmul_transb reduction width {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn large_matmul_engages_both_pool_backends_bit_identically() {
+        // 2 * 128^3 ≈ 4.19e6 flops clears PAR_MIN_FLOPS, so this runs
+        // through the actual worker pools rather than the inline path
+        let ctx = KernelCtx::with_threads(4);
+        assert_eq!(ctx.threads_for(2.0 * 128.0f64.powi(3)), 4);
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(&mut rng, 128, 128, 1.0);
+        let b = Matrix::randn(&mut rng, 128, 128, 1.0);
+        let scoped = matmul(ctx.with_mode(pool::Mode::Scoped), &a, &b);
+        let pinned = matmul(ctx.with_mode(pool::Mode::Pinned), &a, &b);
+        assert!(bits_equal(&scoped, &pinned));
+        assert!(bits_equal(&scoped, &reference::matmul(&a, &b)));
     }
 
     #[test]

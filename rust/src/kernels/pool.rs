@@ -1,26 +1,124 @@
-//! Scoped thread pool with deterministic row-partitioned scheduling.
+//! Deterministic row-partitioned thread pools: scoped and pinned.
 //!
 //! Every parallel kernel splits its *output* rows into at most `threads`
-//! contiguous chunks and hands each chunk to one scoped thread
-//! (`std::thread::scope` — no worker daemons, no unsafe lifetime
-//! erasure).  The partition depends only on `(rows, threads)`, never on
-//! timing, and each output row is written by exactly one thread, so the
-//! bytes produced are identical for every thread count (see KERNELS.md,
-//! "Determinism contract").
+//! contiguous chunks; the partition depends only on `(rows, threads)`,
+//! never on timing, and each output row is written by exactly one
+//! executor, so the bytes produced are identical for every thread count
+//! — and for either pool mode (see KERNELS.md, "Determinism contract").
 //!
-//! Spawning is cheap relative to the O(n^3)/O(n^2 p) work the kernels
-//! ship per call; callers still skip the pool entirely below a work
-//! threshold (see [`crate::kernels::ops`]).
+//! Two execution backends ship behind the same [`run_rows`] API:
+//!
+//! * [`Mode::Scoped`] — `std::thread::scope` spawns fresh threads per
+//!   call.  No daemons, no unsafe lifetime erasure; spawn cost is paid
+//!   on every kernel invocation.
+//! * [`Mode::Pinned`] — a lazily-initialised global set of persistent
+//!   workers, parked on a condvar between calls and woken by a
+//!   lightweight job publication.  Amortises spawn cost across the many
+//!   small back-to-back kernel calls of the Newton–Schulz and Nyström
+//!   block paths.  Workers *pull* chunk indices from a shared counter,
+//!   so any number of live workers (including zero — the caller always
+//!   participates) completes the same fixed partition.
+//!
+//! The mode comes from `SKYFORMER_POOL=scoped|pinned` (default: pinned)
+//! or the process-wide [`set_mode`] override (`--pool` on the CLI);
+//! kernels thread an explicit mode through `KernelCtx` so tests can pin
+//! both backends side by side.  Pool health is observable through the
+//! `pool_wakeups_total` counter and `pool_park_seconds` histogram
+//! (see OBSERVABILITY.md).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs;
+
+/// Safety cap on persistent workers — far above any sane `--threads`.
+const MAX_WORKERS: usize = 256;
+
+/// Which backend executes the row partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Fresh `std::thread::scope` threads per call.
+    Scoped,
+    /// Persistent parked workers woken per job (the default).
+    Pinned,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Scoped => "scoped",
+            Mode::Pinned => "pinned",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scoped" => Some(Mode::Scoped),
+            "pinned" => Some(Mode::Pinned),
+            _ => None,
+        }
+    }
+}
+
+// 0 = unset, 1 = scoped, 2 = pinned
+static MODE_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+fn env_mode() -> Mode {
+    static ENV: OnceLock<Mode> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SKYFORMER_POOL")
+            .ok()
+            .and_then(|v| Mode::parse(&v))
+            .unwrap_or(Mode::Pinned)
+    })
+}
+
+/// The pool mode `KernelCtx::global()` resolves to right now: the
+/// [`set_mode`] override if one was made, else `SKYFORMER_POOL` from the
+/// environment, else [`Mode::Pinned`].
+pub fn current_mode() -> Mode {
+    match MODE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => Mode::Scoped,
+        2 => Mode::Pinned,
+        _ => env_mode(),
+    }
+}
+
+/// Override the pool mode process-wide (the `--pool` CLI knob).
+pub fn set_mode(mode: Mode) {
+    let v = match mode {
+        Mode::Scoped => 1,
+        Mode::Pinned => 2,
+    };
+    MODE_OVERRIDE.store(v, Ordering::Relaxed);
+}
 
 /// Run `f` over the rows of `out` (a `rows * row_len` row-major buffer),
-/// split into at most `threads` contiguous row chunks.
+/// split into at most `threads` contiguous row chunks, on the
+/// process-wide [`current_mode`] backend.
 ///
 /// `f(first_row, chunk)` receives the global index of its first row and
 /// the mutable slice holding rows `first_row .. first_row + chunk_rows`.
 /// With `threads == 1` this is a plain inline call — the scalar path and
-/// the parallel path are the same code.
+/// both parallel paths are the same code.
 pub fn run_rows<F>(threads: usize, rows: usize, row_len: usize, out: &mut [f32], f: F)
 where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    run_rows_in(current_mode(), threads, rows, row_len, out, f)
+}
+
+/// [`run_rows`] with an explicit backend — what `KernelCtx` dispatches
+/// through, and what the parity tests use to pin both modes at once.
+pub fn run_rows_in<F>(
+    mode: Mode,
+    threads: usize,
+    rows: usize,
+    row_len: usize,
+    out: &mut [f32],
+    f: F,
+) where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     debug_assert_eq!(out.len(), rows * row_len);
@@ -32,6 +130,16 @@ where
         f(0, out);
         return;
     }
+    match mode {
+        Mode::Scoped => run_rows_scoped(threads, rows, row_len, out, f),
+        Mode::Pinned => run_rows_pinned(threads, rows, row_len, out, f),
+    }
+}
+
+fn run_rows_scoped<F>(threads: usize, rows: usize, row_len: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
     // ceil split: the first chunks carry one extra row when rows % threads != 0
     let rows_per = rows.div_ceil(threads);
     std::thread::scope(|s| {
@@ -44,6 +152,7 @@ where
 
 /// The deterministic row partition [`run_rows`] uses, as `(first, len)`
 /// pairs — exposed so tests and docs can state the schedule exactly.
+/// Both pool modes execute exactly these chunks.
 pub fn partition(rows: usize, threads: usize) -> Vec<(usize, usize)> {
     if rows == 0 {
         return Vec::new();
@@ -58,6 +167,197 @@ pub fn partition(rows: usize, threads: usize) -> Vec<(usize, usize)> {
         first += len;
     }
     out
+}
+
+// --------------------------------------------------------- pinned pool
+
+/// One published job: a type-erased chunk runner plus the shared chunk
+/// claim counter.  Executors (workers and the submitting caller) pull
+/// chunk indices from `next` until exhausted; which executor runs which
+/// chunk never affects the output, because a chunk's bytes are a pure
+/// function of `(chunk index, inputs)`.
+struct JobInner {
+    /// Runs chunk `t` of the job behind `ctx`.
+    run: unsafe fn(*const (), usize),
+    /// Points at a `CallCtx<F>` on the submitting caller's stack.  Valid
+    /// until every chunk has completed — the caller blocks until then —
+    /// and never dereferenced for claim indices `>= n_chunks`.
+    ctx: *const (),
+    n_chunks: usize,
+    next: AtomicUsize,
+}
+
+// SAFETY: `ctx` is only dereferenced by executors holding a claimed
+// chunk index < n_chunks, which the submitting caller outlives by
+// construction (it waits for `chunks_done == n_chunks` before
+// returning); the closure behind it is `Sync`.
+unsafe impl Send for JobInner {}
+unsafe impl Sync for JobInner {}
+
+struct PoolState {
+    /// Bumped once per published job; workers use it to detect new work.
+    epoch: u64,
+    /// The job for the current epoch (cleared after completion).
+    job: Option<Arc<JobInner>>,
+    /// Chunks of the current job that have finished executing.
+    chunks_done: usize,
+    /// Persistent workers spawned so far.
+    workers: usize,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The submitting caller parks here until `chunks_done == n_chunks`.
+    done: Condvar,
+}
+
+struct PinnedPool {
+    shared: Arc<Shared>,
+    /// Serialises job submission: one job owns the workers at a time.
+    /// Chunk granularity is coarse (≤ `threads` chunks per job), so the
+    /// critical section is the job itself.  Corollary: a row closure
+    /// must never submit a parallel kernel of its own (kernels call only
+    /// `tile` helpers inside closures — nesting would self-deadlock
+    /// here, where scoped mode would merely oversubscribe).
+    submit: Mutex<()>,
+}
+
+fn pinned_pool() -> &'static PinnedPool {
+    static POOL: OnceLock<PinnedPool> = OnceLock::new();
+    POOL.get_or_init(|| PinnedPool {
+        shared: Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                chunks_done: 0,
+                workers: 0,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        }),
+        submit: Mutex::new(()),
+    })
+}
+
+/// Body of one persistent worker: park until the epoch moves, clone the
+/// published job, pull chunks until the counter runs dry, repeat.
+fn worker_loop(shared: Arc<Shared>) {
+    let mut last_seen = {
+        // never run a job published before this worker existed
+        shared.state.lock().unwrap().epoch
+    };
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            let parked_at = Instant::now();
+            while st.epoch == last_seen {
+                st = shared.work.wait(st).unwrap();
+            }
+            last_seen = st.epoch;
+            obs::counter_add("pool_wakeups_total", 1);
+            obs::observe("pool_park_seconds", parked_at.elapsed().as_secs_f64());
+            st.job.clone()
+        };
+        let Some(job) = job else { continue };
+        run_claimed_chunks(&shared, &job);
+    }
+}
+
+/// Pull chunk indices from `job.next` and execute them, reporting each
+/// completion under the state lock (which also publishes the chunk's
+/// writes to the waiting caller).
+fn run_claimed_chunks(shared: &Shared, job: &JobInner) {
+    loop {
+        let t = job.next.fetch_add(1, Ordering::Relaxed);
+        if t >= job.n_chunks {
+            return;
+        }
+        // SAFETY: t < n_chunks, so the caller is still blocked in
+        // submit() and the CallCtx behind `ctx` is alive; chunk t's
+        // output slice is disjoint from every other chunk's.
+        unsafe { (job.run)(job.ctx, t) };
+        let mut st = shared.state.lock().unwrap();
+        st.chunks_done += 1;
+        if st.chunks_done == job.n_chunks {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// What the erased `run` pointer sees: everything needed to slice chunk
+/// `t` out of the output buffer and call the row closure on it.
+struct CallCtx<'a, F> {
+    f: &'a F,
+    out: *mut f32,
+    rows: usize,
+    row_len: usize,
+    rows_per: usize,
+}
+
+unsafe fn run_chunk<F: Fn(usize, &mut [f32]) + Sync>(ctx: *const (), t: usize) {
+    let c = unsafe { &*(ctx as *const CallCtx<F>) };
+    let first = t * c.rows_per;
+    let end = (first + c.rows_per).min(c.rows);
+    // SAFETY: [first, end) rows form a disjoint, in-bounds slice of the
+    // output buffer — exactly the chunk `chunks_mut` would hand out.
+    let chunk = unsafe {
+        std::slice::from_raw_parts_mut(c.out.add(first * c.row_len), (end - first) * c.row_len)
+    };
+    (c.f)(first, chunk);
+}
+
+fn run_rows_pinned<F>(threads: usize, rows: usize, row_len: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let pool = pinned_pool();
+    let rows_per = rows.div_ceil(threads);
+    let n_chunks = rows.div_ceil(rows_per);
+    let call = CallCtx {
+        f: &f,
+        out: out.as_mut_ptr(),
+        rows,
+        row_len,
+        rows_per,
+    };
+    let job = Arc::new(JobInner {
+        run: run_chunk::<F>,
+        ctx: &call as *const CallCtx<F> as *const (),
+        n_chunks,
+        next: AtomicUsize::new(0),
+    });
+
+    // one job at a time owns the workers
+    let _submit = pool.submit.lock().unwrap();
+    {
+        let mut st = pool.shared.state.lock().unwrap();
+        // grow the worker set to cover this width (workers are shared
+        // across all widths; chunk-pulling tolerates any live count)
+        let want = (threads - 1).min(MAX_WORKERS);
+        while st.workers < want {
+            let shared = Arc::clone(&pool.shared);
+            let name = format!("skyformer-pool-{}", st.workers);
+            match std::thread::Builder::new().name(name).spawn(|| worker_loop(shared)) {
+                Ok(_) => st.workers += 1,
+                Err(_) => break, // degrade gracefully: caller still completes the job
+            }
+        }
+        st.epoch += 1;
+        st.job = Some(Arc::clone(&job));
+        st.chunks_done = 0;
+        pool.shared.work.notify_all();
+    }
+
+    // the caller is an executor too — it claims chunks alongside workers
+    run_claimed_chunks(&pool.shared, &job);
+
+    let mut st = pool.shared.state.lock().unwrap();
+    while st.chunks_done < n_chunks {
+        st = pool.shared.done.wait(st).unwrap();
+    }
+    st.job = None; // drop the job (and its caller-stack pointer) with the epoch done
 }
 
 #[cfg(test)]
@@ -81,29 +381,73 @@ mod tests {
         }
     }
 
-    #[test]
-    fn run_rows_writes_every_row_with_its_global_index() {
-        for threads in [1usize, 2, 3, 5] {
-            let (rows, row_len) = (11usize, 4usize);
-            let mut out = vec![0.0f32; rows * row_len];
-            run_rows(threads, rows, row_len, &mut out, |first_row, chunk| {
-                for (r, row) in chunk.chunks_mut(row_len).enumerate() {
-                    for x in row.iter_mut() {
-                        *x = (first_row + r) as f32;
-                    }
+    fn fill_rows(mode: Mode, threads: usize, rows: usize, row_len: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * row_len];
+        run_rows_in(mode, threads, rows, row_len, &mut out, |first_row, chunk| {
+            for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                for x in row.iter_mut() {
+                    *x = (first_row + r) as f32;
                 }
-            });
-            for i in 0..rows {
-                for j in 0..row_len {
-                    assert_eq!(out[i * row_len + j], i as f32, "threads={threads}");
+            }
+        });
+        out
+    }
+
+    #[test]
+    fn run_rows_writes_every_row_with_its_global_index_in_both_modes() {
+        for mode in [Mode::Scoped, Mode::Pinned] {
+            for threads in [1usize, 2, 3, 5] {
+                let (rows, row_len) = (11usize, 4usize);
+                let out = fill_rows(mode, threads, rows, row_len);
+                for i in 0..rows {
+                    for j in 0..row_len {
+                        assert_eq!(
+                            out[i * row_len + j],
+                            i as f32,
+                            "mode={mode:?} threads={threads}"
+                        );
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn run_rows_empty_is_noop() {
-        let mut out: Vec<f32> = Vec::new();
-        run_rows(4, 0, 8, &mut out, |_, _| panic!("must not run"));
+    fn pinned_matches_scoped_under_oversubscription() {
+        // threads > rows must clamp to the same partition in both modes
+        for (rows, threads) in [(3usize, 64usize), (1, 8), (5, 7), (16, 33)] {
+            let scoped = fill_rows(Mode::Scoped, threads, rows, 3);
+            let pinned = fill_rows(Mode::Pinned, threads, rows, 3);
+            assert_eq!(scoped, pinned, "rows={rows} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pinned_survives_many_small_back_to_back_jobs() {
+        // the Newton–Schulz shape: a tight loop of small jobs must not
+        // wedge the parked workers or skip chunks
+        for i in 0..200 {
+            let rows = 2 + (i % 5);
+            let out = fill_rows(Mode::Pinned, 4, rows, 2);
+            for r in 0..rows {
+                assert_eq!(out[r * 2], r as f32, "iteration {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_rows_empty_is_noop_in_both_modes() {
+        for mode in [Mode::Scoped, Mode::Pinned] {
+            let mut out: Vec<f32> = Vec::new();
+            run_rows_in(mode, 4, 0, 8, &mut out, |_, _| panic!("must not run"));
+        }
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(Mode::parse("scoped"), Some(Mode::Scoped));
+        assert_eq!(Mode::parse(" PINNED "), Some(Mode::Pinned));
+        assert_eq!(Mode::parse("turbo"), None);
+        assert_eq!(Mode::Pinned.name(), "pinned");
     }
 }

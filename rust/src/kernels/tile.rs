@@ -1,21 +1,40 @@
 //! The one tiling implementation every dense kernel shares.
 //!
 //! All matmul-shaped loops in the crate — `Matrix::matmul`, the fused
-//! score kernels, the softmax·V epilogue — reduce over `k` in strictly
-//! increasing order, blocked in [`TILE_K`]-wide panels for cache reuse.
-//! Blocking never reorders the reduction (a k-panel is a contiguous,
-//! in-order slice of it), so the tiled result is bit-identical to a
-//! naive `for k in 0..k` accumulation.  That single invariant is what
-//! makes the scalar path, the 1-thread kernel path, and the N-thread
-//! kernel path produce the same bytes.
+//! score kernels, the softmax·V epilogue — reduce over `k` in a fixed
+//! order, blocked in [`TILE_K`]-wide panels for cache reuse and
+//! [`LANES`]-wide accumulator blocks for SIMD.  The fixed order is part
+//! of the determinism contract (KERNELS.md):
+//!
+//! * [`matmul_row_panel`] keeps one accumulator per output element, so
+//!   each element receives its `k` contributions in strictly increasing
+//!   order — lane-blocking over *columns* never touches the reduction
+//!   order, and the result is bit-identical to a naive `for k` loop.
+//! * [`dot`] and [`half_sq_norm`] are genuine reductions, so widening
+//!   them changes the summation order: each of the [`LANES`]
+//!   accumulators reduces its stride-`LANES` subsequence in increasing
+//!   index order, the lanes are combined in increasing-lane order, and
+//!   the tail (`len % LANES`) is folded in last, in increasing index
+//!   order.  That order is fixed — independent of thread count, pool
+//!   mode, and panel boundaries — and `ops::reference` implements the
+//!   same order, which keeps bit-exact parity a checkable contract.
 
 /// Reduction panel width (f32 elements). 64 keeps a `TILE_K x n` panel
 /// of the B operand inside L1/L2 for the Figure-1 sizes (n <= 1024).
 pub const TILE_K: usize = 64;
 
+/// SIMD accumulator block width (f32 elements).  8 matches one AVX2
+/// register / one TPU VPU sublane and divides [`TILE_K`]; the explicit
+/// `[f32; LANES]` blocks below keep accumulators in registers across a
+/// whole k-panel instead of round-tripping through the output slice.
+pub const LANES: usize = 8;
+
 /// `out_row[j] += sum_{kx in kk..k_end} a_row[kx] * b[kx * n + j]`
 /// for every `j` — one output row, one k-panel, unit stride on both
-/// operands (ikj order).
+/// operands (ikj order).  Columns are processed in [`LANES`]-wide
+/// accumulator blocks held across the whole panel; the per-element
+/// reduction order (increasing `kx`) is unchanged by the blocking, so
+/// outputs stay bit-identical to the naive loop.
 #[inline]
 pub fn matmul_row_panel(
     out_row: &mut [f32],
@@ -25,11 +44,28 @@ pub fn matmul_row_panel(
     kk: usize,
     k_end: usize,
 ) {
-    for kx in kk..k_end {
-        let a = a_row[kx];
-        let b_row = &b[kx * n..kx * n + n];
-        for (o, &bv) in out_row.iter_mut().zip(b_row) {
-            *o += a * bv;
+    let mut j0 = 0;
+    while j0 + LANES <= n {
+        let mut acc = [0.0f32; LANES];
+        acc.copy_from_slice(&out_row[j0..j0 + LANES]);
+        for kx in kk..k_end {
+            let a = a_row[kx];
+            let b_blk = &b[kx * n + j0..kx * n + j0 + LANES];
+            for (l, acc_l) in acc.iter_mut().enumerate() {
+                *acc_l += a * b_blk[l];
+            }
+        }
+        out_row[j0..j0 + LANES].copy_from_slice(&acc);
+        j0 += LANES;
+    }
+    if j0 < n {
+        // column tail: same per-element increasing-kx order, scalar width
+        for kx in kk..k_end {
+            let a = a_row[kx];
+            let b_row = &b[kx * n..kx * n + n];
+            for (o, &bv) in out_row[j0..].iter_mut().zip(&b_row[j0..]) {
+                *o += a * bv;
+            }
         }
     }
 }
@@ -47,26 +83,51 @@ pub fn matmul_row(out_row: &mut [f32], a_row: &[f32], b: &[f32], n: usize, k: us
     }
 }
 
-/// Dot product reduced in increasing index order — the `matmul_transb` /
-/// score-kernel inner loop, same reduction order as [`matmul_row_panel`].
+/// Dot product in the fixed lane order — the `matmul_transb` /
+/// score-kernel inner loop.  [`LANES`] accumulators sweep full blocks,
+/// lanes combine in increasing-lane order, the tail folds in last.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
+    let blocks = a.len() / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..blocks {
+        let ax = &a[c * LANES..(c + 1) * LANES];
+        let bx = &b[c * LANES..(c + 1) * LANES];
+        for (l, acc_l) in acc.iter_mut().enumerate() {
+            *acc_l += ax[l] * bx[l];
+        }
     }
-    acc
+    let mut total = 0.0f32;
+    for acc_l in acc {
+        total += acc_l;
+    }
+    for (x, y) in a[blocks * LANES..].iter().zip(&b[blocks * LANES..]) {
+        total += x * y;
+    }
+    total
 }
 
-/// Half squared norm `0.5 * ||x||^2` — the Gaussian-kernel row statistic.
+/// Half squared norm `0.5 * ||x||^2` — the Gaussian-kernel row
+/// statistic, reduced in the same fixed lane order as [`dot`].
 #[inline]
 pub fn half_sq_norm(x: &[f32]) -> f32 {
-    let mut acc = 0.0f32;
-    for v in x {
-        acc += v * v;
+    let blocks = x.len() / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..blocks {
+        let xb = &x[c * LANES..(c + 1) * LANES];
+        for (l, acc_l) in acc.iter_mut().enumerate() {
+            *acc_l += xb[l] * xb[l];
+        }
     }
-    0.5 * acc
+    let mut total = 0.0f32;
+    for acc_l in acc {
+        total += acc_l;
+    }
+    for v in &x[blocks * LANES..] {
+        total += v * v;
+    }
+    0.5 * total
 }
 
 #[cfg(test)]
@@ -83,36 +144,87 @@ mod tests {
         out
     }
 
+    /// The fixed lane order [`dot`] promises, written independently.
+    fn lane_ordered_dot(a: &[f32], b: &[f32]) -> f32 {
+        let blocks = a.len() / LANES;
+        let mut lanes = [0.0f32; LANES];
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate().take(blocks * LANES) {
+            lanes[i % LANES] += x * y;
+        }
+        let mut total = lanes.iter().copied().fold(0.0f32, |t, l| t + l);
+        for (x, y) in a[blocks * LANES..].iter().zip(&b[blocks * LANES..]) {
+            total += x * y;
+        }
+        total
+    }
+
+    fn seq(n: usize, f: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * f).sin()).collect()
+    }
+
     #[test]
     fn panel_loop_is_bit_identical_to_naive_order() {
-        // sizes straddling the panel boundary, including the remainder path
+        // k sizes straddling the panel boundary, n sizes straddling the
+        // lane boundary (the column tail path)
         for &k in &[1usize, TILE_K - 1, TILE_K, TILE_K + 1, 3 * TILE_K + 7] {
-            let n = 5;
-            let a_row: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
-            let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
-            let mut out = vec![0.0f32; n];
-            matmul_row(&mut out, &a_row, &b, n, k);
-            let want = naive_row(&a_row, &b, n, k);
-            for j in 0..n {
-                assert_eq!(out[j].to_bits(), want[j].to_bits(), "k={k} j={j}");
+            for &n in &[1usize, LANES - 1, LANES, LANES + 1, 2 * LANES + 1] {
+                let a_row = seq(k, 0.37);
+                let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+                let mut out = vec![0.0f32; n];
+                matmul_row(&mut out, &a_row, &b, n, k);
+                let want = naive_row(&a_row, &b, n, k);
+                for j in 0..n {
+                    assert_eq!(out[j].to_bits(), want[j].to_bits(), "k={k} n={n} j={j}");
+                }
             }
         }
     }
 
     #[test]
-    fn dot_matches_panel_reduction_order() {
-        let k = TILE_K + 3;
-        let a: Vec<f32> = (0..k).map(|i| (i as f32 * 0.23).sin()).collect();
-        let b: Vec<f32> = (0..k).map(|i| (i as f32 * 0.31).cos()).collect();
-        // dot against a 1-column B must equal matmul_row on the same data
-        let mut out = [0.0f32];
-        matmul_row(&mut out, &a, &b, 1, k);
-        assert_eq!(dot(&a, &b).to_bits(), out[0].to_bits());
+    fn dot_matches_fixed_lane_order_at_lane_boundaries() {
+        for &k in &[
+            0usize,
+            1,
+            LANES - 1,
+            LANES,
+            LANES + 1,
+            2 * LANES + 1,
+            TILE_K,
+            TILE_K + 3,
+        ] {
+            let a = seq(k, 0.23);
+            let b: Vec<f32> = (0..k).map(|i| (i as f32 * 0.31).cos()).collect();
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                lane_ordered_dot(&a, &b).to_bits(),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn half_sq_norm_matches_dot_halved_at_lane_boundaries() {
+        // same lane order as dot(x, x), then the single 0.5 multiply
+        for &k in &[1usize, LANES - 1, LANES, LANES + 1, 2 * LANES + 1] {
+            let x = seq(k, 0.41);
+            assert_eq!(
+                half_sq_norm(&x).to_bits(),
+                (0.5 * lane_ordered_dot(&x, &x)).to_bits(),
+                "k={k}"
+            );
+        }
     }
 
     #[test]
     fn half_sq_norm_known_value() {
         assert_eq!(half_sq_norm(&[3.0, 4.0]), 12.5);
         assert_eq!(half_sq_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn lanes_divides_tile() {
+        // keeps full panels an exact number of lane blocks wide when a
+        // kernel tiles its columns by TILE_K (the score kernels do)
+        assert_eq!(TILE_K % LANES, 0);
     }
 }

@@ -96,6 +96,14 @@ impl Matrix {
         out
     }
 
+    /// `self^T * s` in one pass — the Newton–Schulz seed shape.  Each
+    /// element is the single product `self[(j, i)] * s`, so the result
+    /// is bit-identical to `self.transpose().scale(s)` without the
+    /// intermediate copy.
+    pub fn transpose_scale(&self, s: f32) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)] * s)
+    }
+
     /// Matrix product through the kernel subsystem: cache-blocked over
     /// [`crate::kernels::tile::TILE_K`]-wide k-panels, ikj inner order
     /// (unit-stride on both operands), rows split across the scoped pool
@@ -256,11 +264,14 @@ mod tests {
             }
             out
         };
+        use crate::kernels::tile::LANES;
         let sizes = [1usize, TILE_K - 1, TILE_K, TILE_K + 1];
         let mut rng = Rng::new(7);
         for &m in &sizes {
             for &k in &sizes {
-                for &n in &[1usize, TILE_K + 1] {
+                // n straddles both the lane boundary (accumulator-block
+                // tail) and the panel boundary
+                for &n in &[1usize, LANES - 1, LANES, LANES + 1, 2 * LANES + 1, TILE_K + 1] {
                     let a = Matrix::randn(&mut rng, m, k, 1.0);
                     let b = Matrix::randn(&mut rng, k, n, 1.0);
                     let got = a.matmul(&b);
@@ -278,6 +289,20 @@ mod tests {
         let mut rng = Rng::new(2);
         let a = Matrix::randn(&mut rng, 5, 9, 1.0);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_scale_is_bit_identical_to_transpose_then_scale() {
+        let mut rng = Rng::new(11);
+        let a = Matrix::randn(&mut rng, 13, 7, 1.0);
+        for &s in &[1.0f32, -0.25, 3.7e-3] {
+            let fused = a.transpose_scale(s);
+            let composed = a.transpose().scale(s);
+            assert_eq!((fused.rows, fused.cols), (composed.rows, composed.cols));
+            for (x, y) in fused.data.iter().zip(&composed.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "s={s}");
+            }
+        }
     }
 
     #[test]

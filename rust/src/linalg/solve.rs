@@ -129,7 +129,9 @@ pub fn ns_inverse_with_stats(m: &Matrix, gamma: f32, iters: usize) -> (Matrix, N
     let norminf = (0..n)
         .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
         .fold(0.0f32, f32::max);
-    let mut z = a.transpose().scale(1.0 / (norm1 * norminf).max(1e-30));
+    // transpose_scale fuses the seed into one pass; bit-identical to
+    // a.transpose().scale(..) (each element is a single product)
+    let mut z = a.transpose_scale(1.0 / (norm1 * norminf).max(1e-30));
 
     let mut stats = NsStats {
         iters_run: 0,
@@ -272,6 +274,63 @@ mod tests {
             "loop exited without a recorded reason: {stats:?}"
         );
         assert!(stats.final_residual.is_finite());
+    }
+
+    #[test]
+    fn ns_transpose_free_seed_reproduces_materialised_output() {
+        // ns_inverse exactly as it was before the transpose-free seed
+        // refactor (materialised `a.transpose().scale(..)`), minus obs:
+        // the fused seed is the same single product per element, so the
+        // full adaptive iteration — residual trail, early stops and all —
+        // must reproduce the production output bit-for-bit
+        fn ns_inverse_materialised(m: &Matrix, gamma: f32, iters: usize) -> Matrix {
+            let ctx = KernelCtx::global();
+            let n = m.rows;
+            let (a, d_inv_sqrt) = ns_preconditioner(m, gamma);
+            let eye = Matrix::eye(n);
+            let norm1 = (0..n)
+                .map(|j| (0..n).map(|i| a[(i, j)].abs()).sum::<f32>())
+                .fold(0.0f32, f32::max);
+            let norminf = (0..n)
+                .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+                .fold(0.0f32, f32::max);
+            let mut z = a.transpose().scale(1.0 / (norm1 * norminf).max(1e-30));
+            let mut prev_residual = f32::INFINITY;
+            let mut prev_z: Option<Matrix> = None;
+            for _ in 0..iters {
+                let az = a.matmul(&z);
+                let mut residual = 0.0f32;
+                for i in 0..n {
+                    for (j, &v) in az.row(i).iter().enumerate() {
+                        let d = if i == j { v - 1.0 } else { v };
+                        residual = residual.max(d.abs());
+                    }
+                }
+                if residual <= NS_TOL {
+                    break;
+                }
+                if !residual.is_finite() || residual >= prev_residual {
+                    if let Some(prev) = prev_z {
+                        z = prev;
+                    }
+                    break;
+                }
+                prev_residual = residual;
+                prev_z = Some(z.clone());
+                let t1 = kernels::scale_add(ctx, &eye, 7.0, &az, -1.0);
+                let t2 = kernels::scale_add(ctx, &eye, 15.0, &az.matmul(&t1), -1.0);
+                let t3 = kernels::scale_add(ctx, &eye, 13.0, &az.matmul(&t2), -1.0);
+                z = z.matmul(&t3).scale(0.25);
+            }
+            Matrix::from_fn(n, n, |i, j| d_inv_sqrt[i] * z[(i, j)] * d_inv_sqrt[j])
+        }
+
+        let m = gaussian_gram(9, 32, 8);
+        let got = ns_inverse(&m, 1e-3, 12);
+        let want = ns_inverse_materialised(&m, 1e-3, 12);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

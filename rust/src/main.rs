@@ -26,7 +26,9 @@ use skyformer::data::batch::Split;
 #[cfg(feature = "pjrt")]
 use skyformer::linalg::svd;
 use skyformer::kernels::{self, KernelCtx};
-use skyformer::linalg::{norms, Matrix};
+#[cfg(feature = "pjrt")]
+use skyformer::linalg::Matrix;
+use skyformer::linalg::norms;
 #[cfg(feature = "pjrt")]
 use skyformer::report::tables::{fmt_bytes, fmt_secs};
 use skyformer::report::tables::Table;
@@ -44,6 +46,15 @@ fn main() {
         Err(e) => {
             eprintln!("error: {e}");
             std::process::exit(1);
+        }
+    }
+    if let Some(mode) = args.get("pool") {
+        match skyformer::kernels::pool::Mode::parse(mode) {
+            Some(m) => kernels::pool::set_mode(m),
+            None => {
+                eprintln!("error: bad --pool `{mode}` (scoped|pinned)");
+                std::process::exit(1);
+            }
         }
     }
     let env_prefix = skyformer::obs::init_from_env();
@@ -127,6 +138,9 @@ GLOBAL
   --threads N       kernel pool width (wins over SKYFORMER_THREADS; the
                     determinism contract makes outputs bit-identical for
                     every N)
+  --pool MODE       kernel pool backend, scoped|pinned (wins over
+                    SKYFORMER_POOL; default pinned — persistent parked
+                    workers; outputs are bit-identical in both modes)
   --obs-out PREFIX  dump observability sinks on exit: PREFIX.trace.json
                     (chrome://tracing), PREFIX.events.jsonl,
                     PREFIX.metrics.json, PREFIX.metrics.prom; implies tracing
@@ -134,6 +148,7 @@ ENV
   SKYFORMER_TRACE=1        enable span tracing
   SKYFORMER_OBS_OUT=PREFIX same as --obs-out (flag wins)
   SKYFORMER_THREADS=N      kernel pool width (default: available cores)
+  SKYFORMER_POOL=MODE      kernel pool backend, scoped|pinned (default pinned)
 "#;
 
 /// `skyformer kernels`: run every kernel on seeded inputs and report
@@ -144,45 +159,15 @@ fn kernels_cmd(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 96)?;
     let p = args.get_usize("p", 16)?;
     let ctx = KernelCtx::global();
-    eprintln!("kernels: n={n} p={p} threads={}", ctx.threads);
+    eprintln!(
+        "kernels: n={n} p={p} threads={} pool={}",
+        ctx.threads,
+        ctx.mode.name()
+    );
 
-    let mut rng = Rng::new(args.get_u64("seed", 42)?);
-    let a = Matrix::randn(&mut rng, n, n, 0.5);
-    let b = Matrix::randn(&mut rng, n, n, 0.5);
-    let q = Matrix::randn(&mut rng, n, p, 0.5);
-    let k = Matrix::randn(&mut rng, n, p, 0.5);
-    let v = Matrix::randn(&mut rng, n, p, 1.0);
-    let s = kernels::matmul_transb(ctx, &q, &k);
-
-    use skyformer::kernels::ops::reference;
-    let outs: Vec<(&str, Matrix, Matrix)> = vec![
-        ("matmul", kernels::matmul(ctx, &a, &b), reference::matmul(&a, &b)),
-        (
-            "matmul_transb",
-            kernels::matmul_transb(ctx, &a, &b),
-            reference::matmul_transb(&a, &b),
-        ),
-        (
-            "gaussian_scores",
-            kernels::gaussian_scores(ctx, &q, &k),
-            reference::gaussian_scores(&q, &k),
-        ),
-        (
-            "softmax_scores",
-            kernels::softmax_scores(ctx, &q, &k),
-            reference::softmax_scores(&q, &k),
-        ),
-        (
-            "row_softmax_matmul",
-            kernels::row_softmax_matmul(ctx, &s, &v),
-            reference::row_softmax_matmul(&s, &v),
-        ),
-        (
-            "scale_add",
-            kernels::scale_add(ctx, &a, 7.0, &b, -1.0),
-            reference::scale_add(&a, 7.0, &b, -1.0),
-        ),
-    ];
+    // the suite lives in the library so the golden-fixture integration
+    // test (rust/tests/golden.rs) exercises the exact same workload
+    let outs = kernels::digest_suite(ctx, n, p, args.get_u64("seed", 42)?);
 
     if args.get_bool("digest") {
         for (name, out, _) in &outs {
@@ -192,7 +177,11 @@ fn kernels_cmd(args: &Args) -> Result<()> {
     }
 
     let mut t = Table::new(
-        &format!("Kernel subsystem: n={n} p={p} threads={}", ctx.threads),
+        &format!(
+            "Kernel subsystem: n={n} p={p} threads={} pool={}",
+            ctx.threads,
+            ctx.mode.name()
+        ),
         &["kernel", "shape", "digest", "scalar parity"],
     );
     let mut all_exact = true;

@@ -30,16 +30,18 @@ pub enum Kernel {
 }
 
 impl Kernel {
+    /// One kernel entry, reduced through the same `tile::dot` /
+    /// `tile::half_sq_norm` lane order and combined with the same
+    /// `(dot - hx - hy).exp()` expression as the fused score kernels —
+    /// so a scalar `eval` is bit-identical to the matching
+    /// [`kernel_matrix`] entry.
     #[inline]
     pub fn eval(&self, x: &[f32], y: &[f32]) -> f32 {
-        let dot: f32 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+        use crate::kernels::tile;
+        let dot = tile::dot(x, y);
         match self {
             Kernel::Softmax => dot.exp(),
-            Kernel::Gaussian => {
-                let nx: f32 = x.iter().map(|a| a * a).sum();
-                let ny: f32 = y.iter().map(|a| a * a).sum();
-                (dot - 0.5 * nx - 0.5 * ny).exp()
-            }
+            Kernel::Gaussian => (dot - tile::half_sq_norm(x) - tile::half_sq_norm(y)).exp(),
         }
     }
 }
@@ -168,6 +170,28 @@ mod tests {
         let c = kernel_matrix(Kernel::Gaussian, &q, &q);
         for i in 0..20 {
             assert!((c[(i, i)] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scalar_eval_is_bit_identical_to_fused_kernel_matrix() {
+        // eval shares the tile reductions and the exact epilogue
+        // expression with the fused score kernels — entries must match
+        // bit-for-bit, including at lane-boundary feature widths
+        for &p in &[7usize, 8, 9, 17] {
+            let (q, k) = qk(3, 12, p, 0.6);
+            for kernel in [Kernel::Gaussian, Kernel::Softmax] {
+                let c = kernel_matrix(kernel, &q, &k);
+                for i in 0..q.rows {
+                    for j in 0..k.rows {
+                        assert_eq!(
+                            c[(i, j)].to_bits(),
+                            kernel.eval(q.row(i), k.row(j)).to_bits(),
+                            "{kernel:?} p={p} ({i},{j})"
+                        );
+                    }
+                }
+            }
         }
     }
 

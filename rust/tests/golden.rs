@@ -1,0 +1,63 @@
+//! Golden-digest regression gate for the kernel subsystem.
+//!
+//! `skyformer kernels --digest` and this test share one workload factory
+//! (`kernels::digest_suite`), so the committed fixture
+//! `tests/golden/kernels.digest` can never drift from what the binary
+//! prints.  The test enforces two distinct properties:
+//!
+//! 1. **Cross-schedule determinism** — the digest lines are byte-equal
+//!    across thread counts {1, 4, 8} × pool modes {scoped, pinned}
+//!    (always enforced, on any platform).
+//! 2. **Numeric drift** — the lines match the committed fixture, so an
+//!    unintended change to any kernel's arithmetic fails tests even when
+//!    it is internally consistent across schedules.  Digests pass
+//!    through `exp()`, so the fixture is pinned to the CI platform's
+//!    libm: on a fresh platform (fixture still UNSEEDED) the test writes
+//!    the live lines into the fixture file and asks for them to be
+//!    committed (see KERNELS.md, "Golden digest fixture").
+
+use skyformer::kernels::{self, pool, KernelCtx};
+
+const FIXTURE: &str = include_str!("golden/kernels.digest");
+const FIXTURE_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/kernels.digest");
+
+/// The exact stdout of `skyformer kernels --digest` for one schedule
+/// (default n=96 p=16 seed=42), with oracle parity asserted on the way.
+fn digest_lines(threads: usize, mode: pool::Mode) -> String {
+    let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+    let mut out = String::new();
+    for (name, m, reference) in kernels::digest_suite(ctx, 96, 16, 42) {
+        assert_eq!(
+            kernels::digest(&m),
+            kernels::digest(&reference),
+            "{name} diverged from its scalar oracle ({mode:?}, {threads} threads)"
+        );
+        out.push_str(&format!("{name} {:016x}\n", kernels::digest(&m)));
+    }
+    out
+}
+
+#[test]
+fn kernel_digests_stable_across_schedules_and_match_golden_fixture() {
+    let base = digest_lines(1, pool::Mode::Scoped);
+    for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+        for threads in [1usize, 4, 8] {
+            assert_eq!(
+                digest_lines(threads, mode),
+                base,
+                "digest diverged at {mode:?} x {threads} threads"
+            );
+        }
+    }
+
+    if FIXTURE.starts_with("UNSEEDED") {
+        std::fs::write(FIXTURE_PATH, &base).expect("seed golden fixture");
+        eprintln!("golden: seeded {FIXTURE_PATH}; commit the regenerated file");
+        return;
+    }
+    assert_eq!(
+        base, FIXTURE,
+        "live kernel digests diverged from tests/golden/kernels.digest; \
+         if the numeric change is intended, regenerate the fixture per KERNELS.md"
+    );
+}

@@ -159,6 +159,85 @@ fn prop_row_softmax_matmul_parallel_bit_exact_vs_scalar_reference() {
     });
 }
 
+// ------------------------------------------------------------------ pool
+
+use skyformer::kernels::pool;
+
+/// Deterministic per-cell payload so any partition/scheduling slip shows
+/// up as a byte difference, not just a missed row.
+fn fill_rows(mode: pool::Mode, threads: usize, rows: usize, row_len: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * row_len];
+    pool::run_rows_in(mode, threads, rows, row_len, &mut out, |first_row, chunk| {
+        for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+            let i = first_row + r;
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = ((i * 37 + j * 11 + 3) as f32).sin() + i as f32;
+            }
+        }
+    });
+    out
+}
+
+#[test]
+fn prop_pinned_pool_bit_identical_to_scoped_over_random_shapes() {
+    // random shapes and widths, including threads > rows (oversubscription
+    // clamps to the same partition in both modes) and degenerate rows
+    forall(25, |rng| {
+        let rows = rng.below(60);
+        let row_len = 1 + rng.below(24);
+        let threads = 1 + rng.below(16);
+        let scoped = fill_rows(pool::Mode::Scoped, threads, rows, row_len);
+        let pinned = fill_rows(pool::Mode::Pinned, threads, rows, row_len);
+        for (idx, (x, y)) in scoped.iter().zip(&pinned).enumerate() {
+            check(x.to_bits() == y.to_bits(), || {
+                format!("rows={rows} row_len={row_len} threads={threads}: byte {idx}: {x} vs {y}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pinned_pool_survives_small_back_to_back_job_stress() {
+    // the Newton–Schulz shape: long runs of small kernel-sized jobs
+    // submitted back to back must neither wedge the parked workers nor
+    // drop a chunk; every iteration is checked against the scoped result
+    forall(4, |rng| {
+        for i in 0..120 {
+            let rows = 1 + rng.below(9);
+            let row_len = 1 + rng.below(6);
+            let threads = 2 + rng.below(6);
+            let scoped = fill_rows(pool::Mode::Scoped, threads, rows, row_len);
+            let pinned = fill_rows(pool::Mode::Pinned, threads, rows, row_len);
+            check(scoped == pinned, || {
+                format!("iteration {i}: rows={rows} row_len={row_len} threads={threads}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernels_bit_identical_across_pool_modes_at_pool_scale() {
+    // above PAR_MIN_FLOPS the ops layer actually dispatches to the pools;
+    // outputs must not depend on which backend ran the partition
+    forall(3, |rng| {
+        let n = 128 + rng.below(16);
+        let a = Matrix::randn(rng, n, n, 0.7);
+        let b = Matrix::randn(rng, n, n, 0.7);
+        for threads in [2usize, 4, 8] {
+            let ctx = KernelCtx::with_threads(threads);
+            let scoped = kernels::matmul(ctx.with_mode(pool::Mode::Scoped), &a, &b);
+            let pinned = kernels::matmul(ctx.with_mode(pool::Mode::Pinned), &a, &b);
+            bits_match(&scoped, &pinned, &format!("matmul n={n} @{threads}t"))?;
+            let scoped = kernels::matmul_transa(ctx.with_mode(pool::Mode::Scoped), &a, &b);
+            let pinned = kernels::matmul_transa(ctx.with_mode(pool::Mode::Pinned), &a, &b);
+            bits_match(&scoped, &pinned, &format!("matmul_transa n={n} @{threads}t"))?;
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------- nystrom
 
 #[test]

@@ -26,25 +26,39 @@ cargo clippy --workspace --no-default-features --all-targets -- -D warnings
 echo "==> cargo build (offline feature set)"
 cargo build --workspace --release
 
-echo "==> cargo test (offline feature set, SKYFORMER_THREADS=1)"
-SKYFORMER_THREADS=1 cargo test --workspace --release -q
+echo "==> cargo test (offline feature set, SKYFORMER_THREADS=1, scoped pool)"
+SKYFORMER_THREADS=1 SKYFORMER_POOL=scoped cargo test --workspace --release -q
 
-echo "==> cargo test (offline feature set, SKYFORMER_THREADS=4)"
-SKYFORMER_THREADS=4 cargo test --workspace --release -q
+echo "==> cargo test (offline feature set, SKYFORMER_THREADS=4, pinned pool)"
+SKYFORMER_THREADS=4 SKYFORMER_POOL=pinned cargo test --workspace --release -q
 
-echo "==> kernel determinism: digests must match across thread counts"
-DIG1=$(target/release/skyformer kernels --digest --threads 1)
-DIG4=$(target/release/skyformer kernels --digest --threads 4)
-if [ "$DIG1" != "$DIG4" ]; then
-    echo "kernel digests diverged between --threads 1 and --threads 4:" >&2
-    diff <(echo "$DIG1") <(echo "$DIG4") >&2 || true
-    exit 1
+echo "==> kernel determinism: digest cross-check, threads {1,4,8} x pool {scoped,pinned}"
+FIXTURE=rust/tests/golden/kernels.digest
+# The golden test in the suite above seeds an UNSEEDED fixture in place;
+# regenerate from the binary here too so this gate works standalone.
+if grep -q '^UNSEEDED' "$FIXTURE"; then
+    echo "    fixture UNSEEDED; seeding from the release binary"
+    target/release/skyformer kernels --digest --threads 1 --pool scoped > "$FIXTURE"
+    echo "    commit the regenerated $FIXTURE"
 fi
-echo "    $(echo "$DIG1" | wc -l | tr -d ' ') kernels bit-identical"
+WANT=$(cat "$FIXTURE")
+for t in 1 4 8; do
+    for m in scoped pinned; do
+        DIG=$(SKYFORMER_POOL=$m target/release/skyformer kernels --digest --threads "$t")
+        if [ "$DIG" != "$WANT" ]; then
+            echo "kernel digests diverged from $FIXTURE at --threads $t, pool=$m:" >&2
+            diff <(echo "$WANT") <(echo "$DIG") >&2 || true
+            exit 1
+        fi
+    done
+done
+echo "    $(echo "$WANT" | wc -l | tr -d ' ') kernels bit-identical across 6 schedules + golden fixture"
 
 echo "==> offline benches smoke-run (bench artifact + obs dump path)"
 cargo bench --bench table2_time -- --out /tmp/BENCH_table2.json
 test -s /tmp/BENCH_table2.json
+cargo bench --bench coordinator_hotpath -- --out /tmp/BENCH_hotpath.json
+test -s /tmp/BENCH_hotpath.json
 
 if [ "$WITH_PJRT" = 1 ]; then
     echo "==> cargo build --features pjrt"
