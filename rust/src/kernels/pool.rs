@@ -26,8 +26,10 @@
 //! `pool_wakeups_total` counter and `pool_park_seconds` histogram
 //! (see OBSERVABILITY.md).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::any::Any;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::Instant;
 
 use crate::obs;
@@ -102,6 +104,10 @@ pub fn set_mode(mode: Mode) {
 /// the mutable slice holding rows `first_row .. first_row + chunk_rows`.
 /// With `threads == 1` this is a plain inline call — the scalar path and
 /// both parallel paths are the same code.
+///
+/// A panic in `f` propagates to the caller in both modes (pinned mode
+/// cancels the job's remaining chunks, waits for every claimed chunk to
+/// settle, then re-raises — workers and the pool stay usable).
 pub fn run_rows<F>(threads: usize, rows: usize, row_len: usize, out: &mut [f32], f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -185,12 +191,22 @@ struct JobInner {
     ctx: *const (),
     n_chunks: usize,
     next: AtomicUsize,
+    /// Set when any chunk's closure panicked: chunks claimed afterwards
+    /// are counted as done without running, so completion (and therefore
+    /// the caller's wait) still terminates.
+    cancelled: AtomicBool,
+    /// First panic payload caught by any executor; the submitting caller
+    /// re-raises it after the completion wait.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
 // SAFETY: `ctx` is only dereferenced by executors holding a claimed
 // chunk index < n_chunks, which the submitting caller outlives by
-// construction (it waits for `chunks_done == n_chunks` before
-// returning); the closure behind it is `Sync`.
+// construction: every executor (worker or caller) runs the closure
+// under `catch_unwind`, so no unwind can skip the chunk-done
+// accounting, and the caller waits for `chunks_done == n_chunks`
+// before its stack frame is invalidated — even when re-raising a
+// caught panic.  The closure behind `ctx` is `Sync`.
 unsafe impl Send for JobInner {}
 unsafe impl Sync for JobInner {}
 
@@ -224,6 +240,14 @@ struct PinnedPool {
     submit: Mutex<()>,
 }
 
+/// Lock the pool state, shrugging off poison: the state mutex only
+/// guards counter/epoch bookkeeping whose invariants hold at every
+/// release point, and user-closure panics are caught before they can
+/// unwind through a critical section anyway.
+fn lock_state(shared: &Shared) -> MutexGuard<'_, PoolState> {
+    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 fn pinned_pool() -> &'static PinnedPool {
     static POOL: OnceLock<PinnedPool> = OnceLock::new();
     POOL.get_or_init(|| PinnedPool {
@@ -243,23 +267,39 @@ fn pinned_pool() -> &'static PinnedPool {
 
 /// Body of one persistent worker: park until the epoch moves, clone the
 /// published job, pull chunks until the counter runs dry, repeat.
+///
+/// If the thread ever exits (it shouldn't — chunk panics are caught in
+/// [`run_claimed_chunks`]), a drop guard removes it from the worker
+/// count so the next submission respawns a replacement instead of
+/// silently running with a shrunken pool.
 fn worker_loop(shared: Arc<Shared>) {
+    struct DeregisterOnExit(Arc<Shared>);
+    impl Drop for DeregisterOnExit {
+        fn drop(&mut self) {
+            lock_state(&self.0).workers -= 1;
+        }
+    }
+    let _deregister = DeregisterOnExit(Arc::clone(&shared));
+
     let mut last_seen = {
         // never run a job published before this worker existed
-        shared.state.lock().unwrap().epoch
+        lock_state(&shared).epoch
     };
     loop {
-        let job = {
-            let mut st = shared.state.lock().unwrap();
+        // Take only the job + park duration under the lock; the metrics
+        // registry does its own locking, so recording there while `st`
+        // is held would serialize every worker wakeup through it.
+        let (job, parked) = {
+            let mut st = lock_state(&shared);
             let parked_at = Instant::now();
             while st.epoch == last_seen {
-                st = shared.work.wait(st).unwrap();
+                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
             last_seen = st.epoch;
-            obs::counter_add("pool_wakeups_total", 1);
-            obs::observe("pool_park_seconds", parked_at.elapsed().as_secs_f64());
-            st.job.clone()
+            (st.job.clone(), parked_at.elapsed())
         };
+        obs::counter_add("pool_wakeups_total", 1);
+        obs::observe("pool_park_seconds", parked.as_secs_f64());
         let Some(job) = job else { continue };
         run_claimed_chunks(&shared, &job);
     }
@@ -268,21 +308,49 @@ fn worker_loop(shared: Arc<Shared>) {
 /// Pull chunk indices from `job.next` and execute them, reporting each
 /// completion under the state lock (which also publishes the chunk's
 /// writes to the waiting caller).
+///
+/// Panic-safe: the chunk closure runs under `catch_unwind`, so a panic
+/// in user code can never skip the chunk-done accounting (which would
+/// strand the caller on the `done` condvar while it holds the pool-wide
+/// submit lock) or unwind a worker thread out of its loop.  On panic the
+/// job is cancelled — chunks claimed afterwards are counted without
+/// running — and the first payload is parked on the job for the
+/// submitting caller to re-raise once every chunk has been accounted
+/// for.
 fn run_claimed_chunks(shared: &Shared, job: &JobInner) {
     loop {
         let t = job.next.fetch_add(1, Ordering::Relaxed);
         if t >= job.n_chunks {
             return;
         }
-        // SAFETY: t < n_chunks, so the caller is still blocked in
-        // submit() and the CallCtx behind `ctx` is alive; chunk t's
-        // output slice is disjoint from every other chunk's.
-        unsafe { (job.run)(job.ctx, t) };
-        let mut st = shared.state.lock().unwrap();
-        st.chunks_done += 1;
-        if st.chunks_done == job.n_chunks {
-            shared.done.notify_all();
+        if job.cancelled.load(Ordering::Acquire) {
+            // an earlier chunk panicked: count this one as done without
+            // running it so the caller's completion wait terminates
+            finish_chunk(shared, job);
+            continue;
         }
+        // SAFETY: t < n_chunks, so the caller is still blocked in
+        // run_rows_pinned and the CallCtx behind `ctx` is alive; chunk
+        // t's output slice is disjoint from every other chunk's.
+        // AssertUnwindSafe: on panic the job is cancelled and the
+        // caller re-raises, so the partially-written output buffer is
+        // only ever observed by unwinding code.
+        let ran = std::panic::catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.ctx, t) }));
+        if let Err(payload) = ran {
+            job.cancelled.store(true, Ordering::Release);
+            let mut slot = job.panic.lock().unwrap_or_else(PoisonError::into_inner);
+            slot.get_or_insert(payload);
+        }
+        finish_chunk(shared, job);
+    }
+}
+
+/// Report one chunk complete; the last chunk wakes the waiting caller.
+fn finish_chunk(shared: &Shared, job: &JobInner) {
+    let mut st = lock_state(shared);
+    st.chunks_done += 1;
+    if st.chunks_done == job.n_chunks {
+        shared.done.notify_all();
     }
 }
 
@@ -327,12 +395,14 @@ where
         ctx: &call as *const CallCtx<F> as *const (),
         n_chunks,
         next: AtomicUsize::new(0),
+        cancelled: AtomicBool::new(false),
+        panic: Mutex::new(None),
     });
 
     // one job at a time owns the workers
-    let _submit = pool.submit.lock().unwrap();
+    let _submit = pool.submit.lock().unwrap_or_else(PoisonError::into_inner);
     {
-        let mut st = pool.shared.state.lock().unwrap();
+        let mut st = lock_state(&pool.shared);
         // grow the worker set to cover this width (workers are shared
         // across all widths; chunk-pulling tolerates any live count)
         let want = (threads - 1).min(MAX_WORKERS);
@@ -350,14 +420,29 @@ where
         pool.shared.work.notify_all();
     }
 
-    // the caller is an executor too — it claims chunks alongside workers
+    // The caller is an executor too — it claims chunks alongside the
+    // workers.  run_claimed_chunks never unwinds (closure panics are
+    // caught inside), so control always reaches the completion wait
+    // below and `call`/`out`/`f` stay alive until no executor can still
+    // dereference them.
     run_claimed_chunks(&pool.shared, &job);
 
-    let mut st = pool.shared.state.lock().unwrap();
+    let mut st = lock_state(&pool.shared);
     while st.chunks_done < n_chunks {
-        st = pool.shared.done.wait(st).unwrap();
+        st = pool.shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
     }
     st.job = None; // drop the job (and its caller-stack pointer) with the epoch done
+    drop(st);
+
+    // Every chunk is accounted for and no executor holds `ctx` any
+    // more; if any chunk's closure panicked, surface it here exactly as
+    // the scoped backend would at scope exit.  Release the submit lock
+    // first so the unwind does not poison it for the next job.
+    let payload = job.panic.lock().unwrap_or_else(PoisonError::into_inner).take();
+    if let Some(payload) = payload {
+        drop(_submit);
+        std::panic::resume_unwind(payload);
+    }
 }
 
 #[cfg(test)]
@@ -441,6 +526,44 @@ mod tests {
             let mut out: Vec<f32> = Vec::new();
             run_rows_in(mode, 4, 0, 8, &mut out, |_, _| panic!("must not run"));
         }
+    }
+
+    #[test]
+    fn pinned_propagates_chunk_panic_and_pool_survives() {
+        // A panicking row closure must (a) reach the caller as a panic,
+        // exactly like scoped mode, (b) never strand the caller on the
+        // completion wait, and (c) leave the pool usable — a wedged
+        // submit lock or a silently-dead worker would hang or corrupt
+        // every later job.
+        for round in 0..3 {
+            let caught = std::panic::catch_unwind(|| {
+                let mut out = vec![0.0f32; 8 * 3];
+                run_rows_in(Mode::Pinned, 4, 8, 3, &mut out, |first_row, _chunk| {
+                    if first_row == 2 {
+                        panic!("chunk panic (round {round})");
+                    }
+                });
+            });
+            assert!(caught.is_err(), "round {round}: panic was swallowed");
+        }
+        // pool still produces correct bytes after repeated panics
+        let out = fill_rows(Mode::Pinned, 4, 11, 2);
+        for r in 0..11 {
+            assert_eq!(out[r * 2], r as f32, "post-panic job corrupted");
+        }
+    }
+
+    #[test]
+    fn pinned_panic_in_every_chunk_still_terminates() {
+        // worst case: all claimed chunks panic; completion accounting
+        // must still reach n_chunks and re-raise exactly one payload
+        let caught = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0f32; 6 * 2];
+            run_rows_in(Mode::Pinned, 3, 6, 2, &mut out, |_, _| panic!("all chunks"));
+        });
+        assert!(caught.is_err());
+        let out = fill_rows(Mode::Pinned, 3, 6, 2);
+        assert_eq!(out[10], 5.0);
     }
 
     #[test]

@@ -34,12 +34,14 @@ SKYFORMER_THREADS=4 SKYFORMER_POOL=pinned cargo test --workspace --release -q
 
 echo "==> kernel determinism: digest cross-check, threads {1,4,8} x pool {scoped,pinned}"
 FIXTURE=rust/tests/golden/kernels.digest
-# The golden test in the suite above seeds an UNSEEDED fixture in place;
-# regenerate from the binary here too so this gate works standalone.
+# An UNSEEDED fixture means the numeric-drift gate is not enforcing:
+# fail loudly instead of seeding in place (seeding is an explicit,
+# one-time operator action — see KERNELS.md "Golden digest fixture").
 if grep -q '^UNSEEDED' "$FIXTURE"; then
-    echo "    fixture UNSEEDED; seeding from the release binary"
-    target/release/skyformer kernels --digest --threads 1 --pool scoped > "$FIXTURE"
-    echo "    commit the regenerated $FIXTURE"
+    echo "error: $FIXTURE is UNSEEDED; seed it on the CI platform with" >&2
+    echo "  SKYFORMER_GOLDEN_SEED=1 cargo test --test golden" >&2
+    echo "and commit the regenerated file." >&2
+    exit 1
 fi
 WANT=$(cat "$FIXTURE")
 for t in 1 4 8; do
