@@ -1,0 +1,128 @@
+//! Serving dispatch bench: batched multi-head dispatch (one pool job
+//! per batch) vs per-request dispatch (one pool job per head), across
+//! batch sizes — the number the ROADMAP's "batched multi-head dispatch"
+//! item exists to win.
+//!
+//! Run via `cargo bench --bench serve_dispatch` (custom harness).
+//! Always writes `BENCH_serve_dispatch.json` (override with `--out`)
+//! with per-(kind, batch) rows for both series plus the obs metrics
+//! snapshot.  Bitwise equality of the two series is asserted here too —
+//! a perf number for a wrong result is worse than no number.
+
+use std::time::Duration;
+
+use skyformer::attention::exact;
+use skyformer::kernels::{self, AttnItem, KernelCtx};
+use skyformer::linalg::Matrix;
+use skyformer::serve::ModelKind;
+use skyformer::util::args::Args;
+use skyformer::util::bench::bench;
+use skyformer::util::json::{self, Value};
+use skyformer::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let obs_out =
+        skyformer::obs::init_from_env().or_else(|| args.get("obs-out").map(|s| s.to_string()));
+    if obs_out.is_some() {
+        skyformer::obs::set_enabled(true);
+    }
+
+    let n = args.get_usize("seq", 128).expect("--seq");
+    let p = args.get_usize("dim", 32).expect("--dim");
+    let heads = args.get_usize("heads", 2).expect("--heads");
+    let budget = Duration::from_millis(args.get_u64("budget-ms", 300).expect("--budget-ms"));
+    let ctx = KernelCtx::global();
+    let mut rng = Rng::new(args.get_u64("seed", 42).expect("--seed"));
+
+    let mut rows = Vec::new();
+    for kind in [ModelKind::Exact, ModelKind::Kernelized] {
+        for &batch in &[1usize, 2, 4, 8, 16] {
+            // batch requests x heads independent attention problems
+            let data: Vec<[Matrix; 3]> = (0..batch * heads)
+                .map(|_| {
+                    [
+                        Matrix::randn(&mut rng, n, p, 0.5),
+                        Matrix::randn(&mut rng, n, p, 0.5),
+                        Matrix::randn(&mut rng, n, p, 1.0),
+                    ]
+                })
+                .collect();
+            let items: Vec<AttnItem> =
+                data.iter().map(|[q, k, v]| AttnItem { q, k, v }).collect();
+
+            let batched_out = run_batched(ctx, kind, &items);
+            let unbatched_out = run_unbatched(ctx, kind, &data);
+            for (a, b) in batched_out.iter().zip(&unbatched_out) {
+                assert_eq!(
+                    kernels::digest(a),
+                    kernels::digest(b),
+                    "batched != unbatched ({kind:?}, batch {batch})"
+                );
+            }
+
+            let label_b = format!("{} batched x{batch}", kind.name());
+            let sb = bench(&label_b, budget, || {
+                std::hint::black_box(run_batched(ctx, kind, &items));
+            });
+            let label_u = format!("{} unbatched x{batch}", kind.name());
+            let su = bench(&label_u, budget, || {
+                std::hint::black_box(run_unbatched(ctx, kind, &data));
+            });
+            println!(
+                "{}: batch {batch:>2}: batched {:.3} ms  unbatched {:.3} ms  ({:.2}x)",
+                kind.name(),
+                sb.mean_ms(),
+                su.mean_ms(),
+                su.mean_ms() / sb.mean_ms().max(1e-9)
+            );
+            for (series, stats) in [("batched", sb), ("unbatched", su)] {
+                let mut row = stats.to_json();
+                if let Value::Object(map) = &mut row {
+                    map.insert("kind".into(), json::s(kind.name()));
+                    map.insert("series".into(), json::s(series));
+                    map.insert("batch".into(), json::num(batch as f64));
+                    map.insert("heads".into(), json::num(heads as f64));
+                    map.insert("seq".into(), json::num(n as f64));
+                    map.insert("threads".into(), json::num(ctx.threads as f64));
+                    map.insert("pool".into(), json::s(ctx.mode.name()));
+                }
+                rows.push(row);
+            }
+        }
+    }
+
+    let artifact = json::obj(vec![
+        ("bench", json::s("serve_dispatch")),
+        ("rows", Value::Array(rows)),
+        ("metrics", skyformer::obs::snapshot().to_json()),
+    ]);
+    let out_path = args.get_or("out", "BENCH_serve_dispatch.json").to_string();
+    match std::fs::write(&out_path, json::to_string(&artifact)) {
+        Ok(()) => println!("bench artifact written to {out_path}"),
+        Err(e) => eprintln!("serve_dispatch: cannot write {out_path}: {e}"),
+    }
+
+    if let Some(prefix) = obs_out {
+        match skyformer::obs::dump(&prefix) {
+            Ok(paths) => eprintln!("obs: wrote {}", paths.join(", ")),
+            Err(e) => eprintln!("obs: dump failed: {e}"),
+        }
+    }
+}
+
+fn run_batched(ctx: KernelCtx, kind: ModelKind, items: &[AttnItem]) -> Vec<Matrix> {
+    match kind {
+        ModelKind::Exact => kernels::batched_softmax_attention(ctx, items),
+        ModelKind::Kernelized => kernels::batched_kernelized_attention(ctx, items),
+    }
+}
+
+fn run_unbatched(ctx: KernelCtx, kind: ModelKind, data: &[[Matrix; 3]]) -> Vec<Matrix> {
+    data.iter()
+        .map(|[q, k, v]| match kind {
+            ModelKind::Exact => exact::softmax_attention_in(ctx, q, k, v),
+            ModelKind::Kernelized => exact::kernelized_attention_in(ctx, q, k, v),
+        })
+        .collect()
+}

@@ -31,7 +31,13 @@ pub fn row_softmax(s: &Matrix) -> Matrix {
 /// Vanilla self-attention `softmax(q k^T) v` on pre-scaled q/k — the
 /// score matrix is the only n x m intermediate (fused softmax·V).
 pub fn softmax_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
-    let ctx = KernelCtx::global();
+    softmax_attention_in(KernelCtx::global(), q, k, v)
+}
+
+/// [`softmax_attention`] under an explicit kernel context — the
+/// per-request reference path the serving layer's batched dispatch is
+/// bit-compared against (tests/serve.rs).
+pub fn softmax_attention_in(ctx: KernelCtx, q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
     let s = kernels::matmul_transb(ctx, q, k);
     kernels::row_softmax_matmul(ctx, &s, v)
 }
@@ -39,6 +45,15 @@ pub fn softmax_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
 /// Kernelized Attention (paper Eq. 3): `kappa(q, k) v`, no normalisation.
 pub fn kernelized_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
     kernel_matrix(Kernel::Gaussian, q, k).matmul(v)
+}
+
+/// [`kernelized_attention`] under an explicit kernel context.  Same
+/// composition (`gaussian_scores` then `matmul`), so it is bit-identical
+/// to the global-ctx path for any thread count by the kernel
+/// determinism contract.
+pub fn kernelized_attention_in(ctx: KernelCtx, q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    let s = kernels::gaussian_scores(ctx, q, k);
+    kernels::matmul(ctx, &s, v)
 }
 
 /// The un-normalised softmax score matrix `A = exp(q k^T)` (pre-scaled).

@@ -17,6 +17,11 @@ use crate::util::json::{self, Value};
 const MAGIC: &[u8; 8] = b"SKYCKPT1";
 
 /// Save `state` (aligned with `specs`) to `path`.
+///
+/// The write is atomic with respect to crashes: bytes go to `{path}.tmp`
+/// first and only a successful, flushed write is renamed over `path`, so
+/// a reader (or a resumed run) never observes a torn checkpoint — it sees
+/// either the previous complete file or the new one.
 pub fn save(path: &Path, specs: &[TensorSpec], state: &[Tensor]) -> Result<()> {
     if specs.len() != state.len() {
         return Err(Error::Other(format!(
@@ -41,17 +46,29 @@ pub fn save(path: &Path, specs: &[TensorSpec], state: &[Tensor]) -> Result<()> {
     }
     let header = json::to_string(&json::obj(vec![("tensors", Value::Array(entries))]));
 
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u64).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
-    for t in state {
-        let bytes: &[u8] = match t {
-            Tensor::F32 { data, .. } => cast_slice(data),
-            Tensor::I32 { data, .. } => cast_slice(data),
-            Tensor::U32 { data, .. } => cast_slice(data),
-        };
-        f.write_all(bytes)?;
+    // `.tmp` lives next to the target so the rename stays on one filesystem
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let write_tmp = || -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in state {
+            let bytes: &[u8] = match t {
+                Tensor::F32 { data, .. } => cast_slice(data),
+                Tensor::I32 { data, .. } => cast_slice(data),
+                Tensor::U32 { data, .. } => cast_slice(data),
+            };
+            f.write_all(bytes)?;
+        }
+        f.sync_all()?;
+        Ok(())
+    };
+    if let Err(e) = write_tmp().and_then(|()| Ok(std::fs::rename(&tmp, path)?)) {
+        let _ = std::fs::remove_file(&tmp); // best-effort; the error wins
+        return Err(e);
     }
     Ok(())
 }
@@ -158,6 +175,38 @@ mod tests {
         let (names, loaded) = load(&path).unwrap();
         assert_eq!(names, vec!["params/w", "opt/t", "counts"]);
         assert_eq!(loaded, state);
+    }
+
+    #[test]
+    fn save_leaves_no_tmp_and_overwrites_atomically() {
+        let dir = std::env::temp_dir().join("skyformer_ckpt_test_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let specs = vec![spec("w", vec![2], DType::F32)];
+        let old = vec![Tensor::from_f32(vec![2], vec![1.0, 2.0])];
+        let new = vec![Tensor::from_f32(vec![2], vec![-3.0, 4.5])];
+
+        save(&path, &specs, &old).unwrap();
+        save(&path, &specs, &new).unwrap(); // overwrite of a live checkpoint
+        assert!(!dir.join("state.ckpt.tmp").exists(), "temp file left behind");
+        let (_, loaded) = load(&path).unwrap();
+        assert_eq!(loaded, new);
+    }
+
+    #[test]
+    fn failed_save_preserves_previous_checkpoint() {
+        let dir = std::env::temp_dir().join("skyformer_ckpt_test_fail");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let specs = vec![spec("w", vec![1], DType::F32)];
+        let old = vec![Tensor::scalar_f32(7.0)];
+        save(&path, &specs, &old).unwrap();
+
+        // spec/state length mismatch errors before any byte is written
+        assert!(save(&path, &specs, &[]).is_err());
+        let (_, loaded) = load(&path).unwrap();
+        assert_eq!(loaded, old, "failed save clobbered the previous checkpoint");
+        assert!(!dir.join("state.ckpt.tmp").exists());
     }
 
     #[test]

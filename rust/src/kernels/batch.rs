@@ -1,0 +1,298 @@
+//! Batched multi-head attention dispatch: many independent attention
+//! problems — requests × heads — submitted to the worker pool as **one**
+//! `run_rows` job.
+//!
+//! This closes the ROADMAP "batched multi-head dispatch through one pool
+//! job" item and is what the serving subsystem ([`crate::serve`]) runs
+//! each micro-batch through.  Per-request dispatch pays one pool
+//! publication (and, for small sequences, falls below
+//! [`crate::kernels::PAR_MIN_FLOPS`] and runs inline on one core);
+//! batching concatenates the output rows of every head of every request
+//! into a single row partition, so one wakeup covers the whole batch and
+//! the combined flop count engages the full pool width.
+//!
+//! **Determinism contract** (KERNELS.md): each output row of each item
+//! is computed with exactly the float operations, in exactly the order,
+//! of the per-request kernel composition —
+//!
+//! * [`batched_softmax_attention`] row = the [`super::ops::matmul_transb`]
+//!   score row (one [`tile::dot`] per key) followed by the
+//!   [`super::ops::row_softmax_matmul`] epilogue;
+//! * [`batched_kernelized_attention`] row = the
+//!   [`super::ops::gaussian_scores`] row (dot tile + exp epilogue over
+//!   precomputed half norms) followed by the [`super::ops::matmul`]
+//!   k-panel accumulation ([`tile::matmul_row`]).
+//!
+//! A row's bytes therefore depend only on its own item's `(q, k, v)` —
+//! never on which batch the item landed in, the batch size, the thread
+//! count, or the pool mode.  Batched output is *bit-identical* to
+//! per-request dispatch, which is what lets the serving layer micro-batch
+//! by timing without giving up reproducibility (tests/serve.rs pins this
+//! under threads {1, 4} × both pool backends).
+
+use crate::kernels::{ops::observed, pool, tile, KernelCtx};
+use crate::linalg::Matrix;
+
+/// One attention problem (one head of one request): `q` is `(n, p)`,
+/// `k` is `(m, p)`, `v` is `(m, dv)`.  Items in a batch must agree on
+/// all four dimensions (the serving batcher buckets by them).
+#[derive(Clone, Copy)]
+pub struct AttnItem<'a> {
+    pub q: &'a Matrix,
+    pub k: &'a Matrix,
+    pub v: &'a Matrix,
+}
+
+impl AttnItem<'_> {
+    /// `(n, m, p, dv)` of this item, with internal consistency asserted.
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(
+            self.q.cols, self.k.cols,
+            "attn item: q is {}x{} but k is {}x{}",
+            self.q.rows, self.q.cols, self.k.rows, self.k.cols
+        );
+        assert_eq!(
+            self.k.rows, self.v.rows,
+            "attn item: k has {} rows but v has {}",
+            self.k.rows, self.v.rows
+        );
+        (self.q.rows, self.k.rows, self.q.cols, self.v.cols)
+    }
+}
+
+/// Assert every item shares the leader's shape and return it.
+fn batch_dims(items: &[AttnItem]) -> (usize, usize, usize, usize) {
+    let dims = items[0].dims();
+    for (idx, item) in items.iter().enumerate().skip(1) {
+        assert_eq!(
+            item.dims(),
+            dims,
+            "attn batch: item {idx} shape differs from item 0 (batch by bucket first)"
+        );
+    }
+    dims
+}
+
+/// Split the flat batched output buffer back into one `(n, dv)` matrix
+/// per item.
+fn split_outputs(flat: Vec<f32>, items: usize, n: usize, dv: usize) -> Vec<Matrix> {
+    debug_assert_eq!(flat.len(), items * n * dv);
+    flat.chunks(n * dv)
+        .map(|c| Matrix { rows: n, cols: dv, data: c.to_vec() })
+        .collect()
+}
+
+/// Batched `softmax(q k^T) v` over `items`, one pool job for the whole
+/// batch: output rows `[item * n, (item + 1) * n)` hold item `item`'s
+/// attention output.  Bit-identical to
+/// `row_softmax_matmul(ctx, &matmul_transb(ctx, q, k), v)` per item.
+pub fn batched_softmax_attention(ctx: KernelCtx, items: &[AttnItem]) -> Vec<Matrix> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let (n, m, p, dv) = batch_dims(items);
+    let per_item = 2.0 * n as f64 * p as f64 * m as f64
+        + n as f64 * m as f64 * (2.0 * dv as f64 + 4.0);
+    let flops = items.len() as f64 * per_item;
+    observed(
+        "batched_softmax_attention",
+        "kernel_batched_softmax_attention_seconds",
+        "kernel_batched_softmax_attention_flops",
+        flops,
+        || {
+            let rows = items.len() * n;
+            let threads = ctx.threads_for(flops);
+            let mut out = vec![0.0f32; rows * dv];
+            pool::run_rows_in(ctx.mode, threads, rows, dv, &mut out, |first_row, chunk| {
+                let mut s_row = vec![0.0f32; m];
+                let mut w = vec![0.0f32; m];
+                for (r, out_row) in chunk.chunks_mut(dv).enumerate() {
+                    let g = first_row + r;
+                    let item = &items[g / n];
+                    let q_row = item.q.row(g % n);
+                    // score row: matmul_transb's op order, one dot per key
+                    for (j, s) in s_row.iter_mut().enumerate() {
+                        *s = tile::dot(q_row, item.k.row(j));
+                    }
+                    // fused softmax · V: row_softmax_matmul's op order
+                    let max = s_row.iter().fold(f32::NEG_INFINITY, |acc, &x| acc.max(x));
+                    let mut sum = 0.0f32;
+                    for (wl, &x) in w.iter_mut().zip(&s_row) {
+                        *wl = (x - max).exp();
+                        sum += *wl;
+                    }
+                    let inv = 1.0 / sum.max(1e-30);
+                    for (lx, &wl) in w.iter().enumerate() {
+                        let v_row = item.v.row(lx);
+                        for (o, &vv) in out_row.iter_mut().zip(v_row) {
+                            *o += wl * vv;
+                        }
+                    }
+                    for o in out_row.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            });
+            split_outputs(out, items.len(), n, dv)
+        },
+    )
+}
+
+/// Batched Kernelized Attention `exp(-||q_i - k_j||^2 / 2) v` (paper
+/// Eq. 3) over `items`, one pool job for the whole batch.
+/// Bit-identical to `matmul(ctx, &gaussian_scores(ctx, q, k), v)`
+/// (= `exact::kernelized_attention`) per item.
+pub fn batched_kernelized_attention(ctx: KernelCtx, items: &[AttnItem]) -> Vec<Matrix> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let (n, m, p, dv) = batch_dims(items);
+    let per_item = n as f64 * m as f64 * (2.0 * p as f64 + 3.0)
+        + 2.0 * n as f64 * m as f64 * dv as f64;
+    let flops = items.len() as f64 * per_item;
+    observed(
+        "batched_kernelized_attention",
+        "kernel_batched_kernelized_attention_seconds",
+        "kernel_batched_kernelized_attention_flops",
+        flops,
+        || {
+            // per-item half norms once, exactly as gaussian_scores
+            // precomputes them — the only non-output storage
+            let nq: Vec<Vec<f32>> = items
+                .iter()
+                .map(|it| (0..n).map(|i| tile::half_sq_norm(it.q.row(i))).collect())
+                .collect();
+            let nk: Vec<Vec<f32>> = items
+                .iter()
+                .map(|it| (0..m).map(|j| tile::half_sq_norm(it.k.row(j))).collect())
+                .collect();
+            let rows = items.len() * n;
+            let threads = ctx.threads_for(flops);
+            let mut out = vec![0.0f32; rows * dv];
+            pool::run_rows_in(ctx.mode, threads, rows, dv, &mut out, |first_row, chunk| {
+                let mut g_row = vec![0.0f32; m];
+                for (r, out_row) in chunk.chunks_mut(dv).enumerate() {
+                    let g = first_row + r;
+                    let (b, i) = (g / n, g % n);
+                    let item = &items[b];
+                    let q_row = item.q.row(i);
+                    // gaussian score row: dot tile + exp epilogue, the
+                    // gaussian_scores op order
+                    let mut j0 = 0;
+                    while j0 < m {
+                        let j_end = (j0 + tile::TILE_K).min(m);
+                        let mut dots = [0.0f32; tile::TILE_K];
+                        for (t, j) in (j0..j_end).enumerate() {
+                            dots[t] = tile::dot(q_row, item.k.row(j));
+                        }
+                        for (t, j) in (j0..j_end).enumerate() {
+                            g_row[j] = (dots[t] - nq[b][i] - nk[b][j]).exp();
+                        }
+                        j0 = j_end;
+                    }
+                    // out_row = g_row @ V: matmul's k-panel order
+                    tile::matmul_row(out_row, &g_row, &item.v.data, dv, m);
+                }
+            });
+            split_outputs(out, items.len(), n, dv)
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, pool};
+    use crate::util::rng::Rng;
+
+    fn items_data(count: usize, n: usize, m: usize, p: usize, dv: usize) -> Vec<[Matrix; 3]> {
+        let mut rng = Rng::new(17);
+        (0..count)
+            .map(|_| {
+                [
+                    Matrix::randn(&mut rng, n, p, 0.5),
+                    Matrix::randn(&mut rng, m, p, 0.5),
+                    Matrix::randn(&mut rng, m, dv, 1.0),
+                ]
+            })
+            .collect()
+    }
+
+    fn as_items(data: &[[Matrix; 3]]) -> Vec<AttnItem<'_>> {
+        data.iter().map(|[q, k, v]| AttnItem { q, k, v }).collect()
+    }
+
+    fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+        a.rows == b.rows
+            && a.cols == b.cols
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn batched_softmax_matches_per_request_composition_bitwise() {
+        let data = items_data(3, 13, 11, 8, 5);
+        let items = as_items(&data);
+        for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+            for threads in [1usize, 4] {
+                let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+                let outs = batched_softmax_attention(ctx, &items);
+                assert_eq!(outs.len(), 3);
+                for (out, [q, k, v]) in outs.iter().zip(&data) {
+                    let s = kernels::matmul_transb(ctx, q, k);
+                    let want = kernels::row_softmax_matmul(ctx, &s, v);
+                    assert!(bits_equal(out, &want), "{mode:?} x {threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_kernelized_matches_per_request_composition_bitwise() {
+        let data = items_data(2, 9, 14, 8, 6);
+        let items = as_items(&data);
+        for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+            for threads in [1usize, 4] {
+                let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+                let outs = batched_kernelized_attention(ctx, &items);
+                for (out, [q, k, v]) in outs.iter().zip(&data) {
+                    let want = kernels::matmul(ctx, &kernels::gaussian_scores(ctx, q, k), v);
+                    assert!(bits_equal(out, &want), "{mode:?} x {threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn output_is_independent_of_batch_composition() {
+        // the serving-layer invariant: an item's bytes don't change when
+        // its batch peers do — a request digests the same whether it was
+        // coalesced with 0, 2, or 5 neighbours
+        let data = items_data(6, 10, 10, 8, 8);
+        let items = as_items(&data);
+        let ctx = KernelCtx::with_threads(4);
+        let all = batched_softmax_attention(ctx, &items);
+        let solo = batched_softmax_attention(ctx, &items[2..3]);
+        assert!(bits_equal(&all[2], &solo[0]));
+        let pair = batched_softmax_attention(ctx, &items[1..3]);
+        assert!(bits_equal(&all[2], &pair[1]));
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let ctx = KernelCtx::with_threads(4);
+        assert!(batched_softmax_attention(ctx, &[]).is_empty());
+        assert!(batched_kernelized_attention(ctx, &[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape differs")]
+    fn mixed_shapes_panic() {
+        let a = items_data(1, 8, 8, 4, 4);
+        let b = items_data(1, 9, 8, 4, 4);
+        let items = vec![
+            AttnItem { q: &a[0][0], k: &a[0][1], v: &a[0][2] },
+            AttnItem { q: &b[0][0], k: &b[0][1], v: &b[0][2] },
+        ];
+        batched_softmax_attention(KernelCtx::with_threads(1), &items);
+    }
+}

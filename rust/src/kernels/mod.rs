@@ -38,6 +38,7 @@
 //! the backend.  Jobs below [`PAR_MIN_FLOPS`] nominal flops run inline
 //! on the caller.
 
+pub mod batch;
 pub mod ops;
 pub mod pool;
 pub mod tile;
@@ -48,6 +49,7 @@ use std::sync::OnceLock;
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
+pub use batch::{batched_kernelized_attention, batched_softmax_attention, AttnItem};
 pub use ops::{
     gaussian_scores, matmul, matmul_transa, matmul_transb, row_softmax_matmul, scale_add,
     softmax_scores,
@@ -185,6 +187,74 @@ pub fn digest_suite(
             "row_softmax_matmul",
             ops::row_softmax_matmul(ctx, &s, &v),
             reference::row_softmax_matmul(&s, &v),
+        ),
+        (
+            "scale_add",
+            ops::scale_add(ctx, &a, 7.0, &b, -1.0),
+            reference::scale_add(&a, 7.0, &b, -1.0),
+        ),
+        {
+            // batched multi-head dispatch: three heads through one pool
+            // job; digest the vcat so the line covers every head
+            let items = [
+                batch::AttnItem { q: &q, k: &k, v: &v },
+                batch::AttnItem { q: &k, k: &q, v: &v },
+                batch::AttnItem { q: &v, k: &q, v: &k },
+            ];
+            let outs = batch::batched_softmax_attention(ctx, &items);
+            let got = outs[0].vcat(&outs[1]).vcat(&outs[2]);
+            let want_one = |q: &Matrix, k: &Matrix, v: &Matrix| {
+                reference::row_softmax_matmul(&reference::matmul_transb(q, k), v)
+            };
+            let want = want_one(&q, &k, &v)
+                .vcat(&want_one(&k, &q, &v))
+                .vcat(&want_one(&v, &q, &k));
+            ("batched_softmax_attention", got, want)
+        },
+        {
+            let items = [
+                batch::AttnItem { q: &q, k: &k, v: &v },
+                batch::AttnItem { q: &k, k: &q, v: &v },
+                batch::AttnItem { q: &v, k: &q, v: &k },
+            ];
+            let outs = batch::batched_kernelized_attention(ctx, &items);
+            let got = outs[0].vcat(&outs[1]).vcat(&outs[2]);
+            let want_one = |q: &Matrix, k: &Matrix, v: &Matrix| {
+                reference::matmul(&reference::gaussian_scores(q, k), v)
+            };
+            let want = want_one(&q, &k, &v)
+                .vcat(&want_one(&k, &q, &v))
+                .vcat(&want_one(&v, &q, &k));
+            ("batched_kernelized_attention", got, want)
+        },
+    ]
+}
+
+/// The **portable** digest workload: kernels whose arithmetic is pure
+/// IEEE-754 f32 `+`/`*` on [`Matrix::rand_uniform`] inputs — no libm
+/// (`exp`/`ln`/`cos`) anywhere on the data path, so the digests are
+/// identical on every IEEE platform and the committed fixture
+/// `rust/tests/golden/kernels.portable.digest` can be generated off-host
+/// (see `scripts/seed_golden_portable.py`) and *hard*-enforced
+/// everywhere.  The libm-dependent kernels stay in [`digest_suite`],
+/// whose fixture is pinned per-platform.
+pub fn digest_suite_portable(
+    ctx: KernelCtx,
+    n: usize,
+    seed: u64,
+) -> Vec<(&'static str, Matrix, Matrix)> {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::rand_uniform(&mut rng, n, n, -1.0, 1.0);
+    let b = Matrix::rand_uniform(&mut rng, n, n, -1.0, 1.0);
+
+    use ops::reference;
+    vec![
+        ("matmul", ops::matmul(ctx, &a, &b), reference::matmul(&a, &b)),
+        ("matmul_transa", ops::matmul_transa(ctx, &a, &b), reference::matmul_transa(&a, &b)),
+        (
+            "matmul_transb",
+            ops::matmul_transb(ctx, &a, &b),
+            reference::matmul_transb(&a, &b),
         ),
         (
             "scale_add",

@@ -23,7 +23,9 @@ use crate::obs;
 
 /// Record span + duration/FLOP histograms around one kernel invocation.
 /// Metric names are static so the hot path never formats strings.
-fn observed<R>(
+/// `pub(crate)` so the batched kernels in [`crate::kernels::batch`]
+/// report through the same channel.
+pub(crate) fn observed<R>(
     name: &'static str,
     seconds_metric: &'static str,
     flops_metric: &'static str,

@@ -35,6 +35,14 @@
 //! across thread counts (KERNELS.md); pick the width with
 //! `SKYFORMER_THREADS=N` or `--threads N`.
 //!
+//! The inference request path lives in [`serve`] (SERVING.md): a
+//! bounded admission queue with backpressure, a dynamic micro-batcher
+//! that coalesces compatible requests by model kind + attention shape,
+//! and a deadline-aware dispatcher that runs each batch — all heads of
+//! all requests — as **one** kernel-pool job via the batched attention
+//! kernels in [`kernels::batch`].  Batched output is bit-identical to
+//! per-request dispatch, so micro-batching never costs reproducibility.
+//!
 //! Cross-cutting observability lives in [`obs`]: hierarchical span tracing
 //! over the train step → upload/execute/download pipeline and the
 //! Newton–Schulz solve, a global metrics registry (counters, gauges,
@@ -55,6 +63,7 @@ pub mod nystrom;
 pub mod obs;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use util::error::{Error, Result};

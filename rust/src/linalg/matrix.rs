@@ -56,6 +56,15 @@ impl Matrix {
         Matrix::from_fn(rows, cols, |_, _| rng.normal() * sigma)
     }
 
+    /// i.i.d. Uniform[lo, hi) entries.  Unlike [`Matrix::randn`] (whose
+    /// Box–Muller transform calls platform libm), this path is pure f32
+    /// +/* arithmetic on 24-bit integers, so the values are reproducible
+    /// bit-for-bit on any IEEE-754 platform — the portable golden digest
+    /// suite depends on that (KERNELS.md, "Golden digest fixture").
+    pub fn rand_uniform(rng: &mut Rng, rows: usize, cols: usize, lo: f32, hi: f32) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| rng.range_f32(lo, hi))
+    }
+
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }

@@ -26,9 +26,8 @@ use skyformer::data::batch::Split;
 #[cfg(feature = "pjrt")]
 use skyformer::linalg::svd;
 use skyformer::kernels::{self, KernelCtx};
-#[cfg(feature = "pjrt")]
-use skyformer::linalg::Matrix;
 use skyformer::linalg::norms;
+use skyformer::linalg::Matrix;
 #[cfg(feature = "pjrt")]
 use skyformer::report::tables::{fmt_bytes, fmt_secs};
 use skyformer::report::tables::Table;
@@ -94,6 +93,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "sweep" => sweep(args),
         "approx" => approx(args),
         "kernels" => kernels_cmd(args),
+        "serve-bench" => serve_bench(args),
         #[cfg(feature = "pjrt")]
         "instability" => instability(args),
         #[cfg(feature = "pjrt")]
@@ -127,8 +127,26 @@ COMMANDS
                   [--regimes init,pretrained] [--trials 3]
   kernels       exercise the native kernel subsystem on seeded inputs
                   [--n 96] [--p 16] [--seed 42]
+                  [--suite libm|portable]  libm (default) = the full suite
+                              (exp paths; fixture pinned per-platform);
+                              portable = pure-IEEE-arithmetic kernels whose
+                              fixture is identical on every platform
                   [--digest]  print only `name digest` lines (stdout) for
                               the CI cross-thread determinism diff
+  serve-bench   drive the serving subsystem with synthetic client load and
+                write BENCH_serve.json (p50/p99 latency, throughput)
+                  [--requests 1000] [--clients 8] [--seq 128[,256,...]]
+                  [--dim 32] [--dv DIM] [--heads 2]
+                  [--model exact|kernelized|mixed]
+                  [--max-batch 8] [--max-wait-us 200] [--queue-cap 512]
+                  [--deadline-ms 0]   0 = none; >0 sheds requests whose
+                                      deadline passes before compute
+                  [--seed 42] [--out BENCH_serve.json]
+                  [--verify]  recompute every completed request unbatched
+                              and require bit-identical outputs
+                  [--smoke]   CI mode: no deadlines, retry on backpressure,
+                              implies --verify, asserts zero lost requests,
+                              prints `serve_digest <hex>` for schedule diffs
   instability   Table 3: 20-step instability-score ratios vs self-attention
                   --task listops [--attentions kernelized,skyformer,nystromformer]
   svd           Figure 4: singular-value decay of attention output
@@ -158,16 +176,26 @@ ENV
 fn kernels_cmd(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 96)?;
     let p = args.get_usize("p", 16)?;
+    let seed = args.get_u64("seed", 42)?;
+    let suite = args.get_or("suite", "libm");
     let ctx = KernelCtx::global();
     eprintln!(
-        "kernels: n={n} p={p} threads={} pool={}",
+        "kernels: suite={suite} n={n} p={p} threads={} pool={}",
         ctx.threads,
         ctx.mode.name()
     );
 
-    // the suite lives in the library so the golden-fixture integration
-    // test (rust/tests/golden.rs) exercises the exact same workload
-    let outs = kernels::digest_suite(ctx, n, p, args.get_u64("seed", 42)?);
+    // the suites live in the library so the golden-fixture integration
+    // test (rust/tests/golden.rs) exercises the exact same workloads
+    let outs = match suite {
+        "libm" => kernels::digest_suite(ctx, n, p, seed),
+        "portable" => kernels::digest_suite_portable(ctx, n, seed),
+        other => {
+            return Err(skyformer::Error::Config(format!(
+                "bad --suite `{other}` (libm|portable)"
+            )))
+        }
+    };
 
     if args.get_bool("digest") {
         for (name, out, _) in &outs {
@@ -201,6 +229,281 @@ fn kernels_cmd(args: &Args) -> Result<()> {
             "kernel output diverged from the scalar oracle".into(),
         ));
     }
+    Ok(())
+}
+
+/// `skyformer serve-bench`: drive the serving subsystem
+/// (`skyformer::serve`) with N synthetic open-loop clients and write a
+/// `BENCH_serve.json` artifact.  Every request resolves as completed,
+/// shed, or rejected — a request falling through is a hard error.  With
+/// `--verify` (implied by `--smoke`), every completed request is
+/// recomputed through the *unbatched* per-request attention path and
+/// required to match bit-for-bit, and a combined `serve_digest` line is
+/// printed so CI can diff schedules (threads × pool backends).
+fn serve_bench(args: &Args) -> Result<()> {
+    use skyformer::serve::{
+        Head, ModelKind, Outcome, RejectReason, Request, ServeConfig, Server, Ticket,
+    };
+    use std::time::{Duration, Instant};
+
+    let requests = args.get_usize("requests", 1000)?;
+    let clients = args.get_usize("clients", 8)?.max(1);
+    let seqs: Vec<usize> = match args.get_list("seq") {
+        None => vec![128],
+        Some(list) => list
+            .iter()
+            .map(|v| {
+                v.parse::<usize>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .ok_or_else(|| skyformer::Error::Config(format!("bad --seq `{v}`")))
+            })
+            .collect::<Result<_>>()?,
+    };
+    if seqs.is_empty() {
+        return Err(skyformer::Error::Config("--seq list is empty".into()));
+    }
+    let dim = args.get_usize("dim", 32)?;
+    let dv = args.get_usize("dv", dim)?;
+    let heads = args.get_usize("heads", 2)?.max(1);
+    let model = args.get_or("model", "exact").to_string();
+    if !matches!(model.as_str(), "exact" | "kernelized" | "mixed") {
+        return Err(skyformer::Error::Config(format!(
+            "bad --model `{model}` (exact|kernelized|mixed)"
+        )));
+    }
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let max_wait_us = args.get_u64("max-wait-us", 200)?;
+    let queue_cap = args.get_usize("queue-cap", 512)?;
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let smoke = args.get_bool("smoke");
+    let verify = smoke || args.get_bool("verify");
+    let out_path = args.get_or("out", "BENCH_serve.json").to_string();
+
+    let ctx = KernelCtx::global();
+    let kind_of = |id: u64| match model.as_str() {
+        "kernelized" => ModelKind::Kernelized,
+        "mixed" if id % 2 == 1 => ModelKind::Kernelized,
+        _ => ModelKind::Exact,
+    };
+    // request data depends on (seed, id) alone — not on which client
+    // thread generates it or when — so the workload is reproducible and
+    // the unbatched verify pass can regenerate any request
+    let gen_heads = |id: u64| -> Vec<Head> {
+        let root = Rng::new(seed).split(id);
+        let n = seqs[id as usize % seqs.len()];
+        (0..heads)
+            .map(|h| {
+                let mut r = root.split(h as u64 + 1);
+                Head {
+                    q: Matrix::randn(&mut r, n, dim, 0.5),
+                    k: Matrix::randn(&mut r, n, dim, 0.5),
+                    v: Matrix::randn(&mut r, n, dv, 1.0),
+                }
+            })
+            .collect()
+    };
+
+    const FNV: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let fold = |h: u64, x: u64| (h ^ x).wrapping_mul(FNV_PRIME);
+
+    eprintln!(
+        "serve-bench: {requests} requests, {clients} clients, model={model}, \
+         seq={seqs:?}, heads={heads}, max_batch={max_batch}, max_wait={max_wait_us}us, \
+         queue_cap={queue_cap}, deadline_ms={deadline_ms}, threads={}, pool={}{}",
+        ctx.threads,
+        ctx.mode.name(),
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let cfg = ServeConfig {
+        queue_capacity: queue_cap,
+        max_batch,
+        max_wait: Duration::from_micros(max_wait_us),
+    };
+    let server = Server::start(cfg, ctx);
+
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum Final {
+        Completed,
+        Shed,
+        Rejected,
+    }
+    // (id, final state, client-observed latency, served output digest)
+    let t0 = Instant::now();
+    let results: Vec<(u64, Final, f64, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let server = &server;
+                let gen_heads = &gen_heads;
+                let kind_of = &kind_of;
+                scope.spawn(move || {
+                    // open loop: submit this client's id stride first,
+                    // then collect — queued depth is what exercises the
+                    // batcher and (at low queue_cap) backpressure
+                    let mut tickets: Vec<(u64, Instant, Option<Ticket>)> = Vec::new();
+                    let mut id = c as u64;
+                    while (id as usize) < requests {
+                        let deadline = (!smoke && deadline_ms > 0)
+                            .then(|| Instant::now() + Duration::from_millis(deadline_ms));
+                        let mut req =
+                            Request { id, kind: kind_of(id), heads: gen_heads(id), deadline };
+                        let submitted = Instant::now();
+                        let ticket = loop {
+                            match server.submit(req) {
+                                Ok(t) => break Some(t),
+                                Err(RejectReason::QueueFull) if smoke => {
+                                    // smoke asserts zero lost requests, so
+                                    // backpressure means retry, not give up
+                                    std::thread::sleep(Duration::from_micros(50));
+                                    req = Request {
+                                        id,
+                                        kind: kind_of(id),
+                                        heads: gen_heads(id),
+                                        deadline: None,
+                                    };
+                                }
+                                Err(_) => break None,
+                            }
+                        };
+                        tickets.push((id, submitted, ticket));
+                        id += clients as u64;
+                    }
+                    let mut local = Vec::new();
+                    for (id, submitted, ticket) in tickets {
+                        let entry = match ticket {
+                            None => (id, Final::Rejected, 0.0, 0),
+                            Some(t) => match t.wait() {
+                                Outcome::Completed { outputs } => {
+                                    let lat = submitted.elapsed().as_secs_f64();
+                                    let digest = outputs
+                                        .iter()
+                                        .fold(FNV, |h, o| fold(h, kernels::digest(o)));
+                                    (id, Final::Completed, lat, digest)
+                                }
+                                Outcome::Shed(_) => (id, Final::Shed, 0.0, 0),
+                            },
+                        };
+                        local.push(entry);
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    let count = |f: Final| results.iter().filter(|r| r.1 == f).count();
+    let (completed, shed, rejected) = (count(Final::Completed), count(Final::Shed), count(Final::Rejected));
+    if completed + shed + rejected != requests {
+        return Err(skyformer::Error::Config(format!(
+            "lost requests: {completed} completed + {shed} shed + {rejected} rejected != {requests}"
+        )));
+    }
+    if smoke && (shed > 0 || rejected > 0) {
+        return Err(skyformer::Error::Config(format!(
+            "smoke expects every request to complete: {shed} shed, {rejected} rejected"
+        )));
+    }
+
+    let mut lats: Vec<f64> =
+        results.iter().filter(|r| r.1 == Final::Completed).map(|r| r.2).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| {
+        if lats.is_empty() {
+            0.0
+        } else {
+            lats[((lats.len() - 1) as f64 * q).round() as usize]
+        }
+    };
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    let mean = if lats.is_empty() { 0.0 } else { lats.iter().sum::<f64>() / lats.len() as f64 };
+    let lat_max = lats.last().copied().unwrap_or(0.0);
+
+    // verify: recompute every completed request through the unbatched
+    // per-request path and fold a combined digest in id order (batch
+    // composition is timing-dependent; per-request bits are not)
+    let mut combined = FNV;
+    if verify {
+        let mut done: Vec<(u64, u64)> = results
+            .iter()
+            .filter(|r| r.1 == Final::Completed)
+            .map(|r| (r.0, r.3))
+            .collect();
+        done.sort_unstable_by_key(|r| r.0);
+        let mut mismatched = 0usize;
+        for &(id, served) in &done {
+            let want = gen_heads(id).iter().fold(FNV, |h, hd| {
+                let out = match kind_of(id) {
+                    ModelKind::Exact => exact::softmax_attention_in(ctx, &hd.q, &hd.k, &hd.v),
+                    ModelKind::Kernelized => {
+                        exact::kernelized_attention_in(ctx, &hd.q, &hd.k, &hd.v)
+                    }
+                };
+                fold(h, kernels::digest(&out))
+            });
+            if want != served {
+                mismatched += 1;
+            }
+            combined = fold(combined, served);
+        }
+        println!("serve_digest {combined:016x}");
+        if mismatched > 0 {
+            return Err(skyformer::Error::Config(format!(
+                "batched dispatch diverged from per-request dispatch on {mismatched} of {} \
+                 completed requests",
+                done.len()
+            )));
+        }
+    }
+
+    use skyformer::util::json::{num, obj, s, to_string, Value};
+    let doc = obj(vec![
+        ("bench", s("serve")),
+        ("requests", num(requests as f64)),
+        ("clients", num(clients as f64)),
+        ("model", s(model.clone())),
+        ("seq", Value::Array(seqs.iter().map(|&n| num(n as f64)).collect())),
+        ("dim", num(dim as f64)),
+        ("dv", num(dv as f64)),
+        ("heads", num(heads as f64)),
+        ("max_batch", num(max_batch as f64)),
+        ("max_wait_us", num(max_wait_us as f64)),
+        ("queue_capacity", num(queue_cap as f64)),
+        ("deadline_ms", num(deadline_ms as f64)),
+        ("threads", num(ctx.threads as f64)),
+        ("pool", s(ctx.mode.name())),
+        ("completed", num(completed as f64)),
+        ("shed", num(shed as f64)),
+        ("rejected", num(rejected as f64)),
+        ("wall_seconds", num(wall)),
+        ("throughput_rps", num(completed as f64 / wall.max(1e-9))),
+        (
+            "latency_seconds",
+            obj(vec![
+                ("p50", num(p50)),
+                ("p99", num(p99)),
+                ("mean", num(mean)),
+                ("max", num(lat_max)),
+            ]),
+        ),
+        (
+            "digest",
+            if verify { s(format!("{combined:016x}")) } else { Value::Null },
+        ),
+        ("metrics", skyformer::obs::snapshot().to_json()),
+    ]);
+    std::fs::write(&out_path, to_string(&doc))?;
+
+    println!(
+        "serve-bench: {completed} completed, {shed} shed, {rejected} rejected in {wall:.3}s \
+         ({:.0} req/s); latency p50={p50:.6}s p99={p99:.6}s; wrote {out_path}",
+        completed as f64 / wall.max(1e-9)
+    );
     Ok(())
 }
 

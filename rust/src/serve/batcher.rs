@@ -1,0 +1,281 @@
+//! Dynamic micro-batching: pure planning functions over the queue's
+//! `VecDeque`, plus the blocking gather loop the dispatcher runs.
+//!
+//! The planning core ([`pop_leader`], [`take_compatible`]) takes the
+//! deque and an explicit `now`, touching no clocks, locks, or threads —
+//! so the batching policy is testable as plain data transformation
+//! (tests/serve.rs drives it with synthetic timestamps).  Policy:
+//!
+//! * **Leader** = oldest live request (strict FIFO at the head;
+//!   expired entries are shed, not served).
+//! * **Compatibility** = same [`BucketKey`]: model kind + attention
+//!   shape `(n, m, p, dv)`.  Head *count* is deliberately not part of
+//!   the key — heads flatten into the one pool job either way.
+//! * **FIFO within bucket**: the scan walks front-to-back and takes
+//!   matching entries in queue order; non-matching entries keep their
+//!   positions (no starvation reordering across buckets beyond the
+//!   leader's bucket jumping the line).
+//! * A batch closes at `max_batch` requests or when the leader has
+//!   waited `max_wait` since the gather began, whichever comes first.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::queue::{Pending, Queue};
+use super::{ModelKind, Request, ServeConfig};
+
+/// The coalescing key: requests batch together iff these agree (the
+/// batched kernels require uniform item shapes within one job).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub kind: ModelKind,
+    /// Query length (rows of q).
+    pub n: usize,
+    /// Key/value length (rows of k and v).
+    pub m: usize,
+    /// Head width (cols of q and k).
+    pub p: usize,
+    /// Value width (cols of v).
+    pub dv: usize,
+}
+
+impl BucketKey {
+    /// The bucket of a validated request (first head is authoritative;
+    /// admission validation guarantees the rest agree).
+    pub fn of(req: &Request) -> BucketKey {
+        let h = req.heads.first().expect("validated request has heads");
+        BucketKey { kind: req.kind, n: h.q.rows, m: h.k.rows, p: h.q.cols, dv: h.v.cols }
+    }
+}
+
+/// Pop the oldest live entry, shedding every expired entry in front of
+/// it.  Pure: no clock, no lock — `now` is the caller's.
+pub(crate) fn pop_leader(items: &mut VecDeque<Pending>, now: Instant) -> Option<Pending> {
+    while let Some(p) = items.pop_front() {
+        if p.req.expired(now) {
+            p.shed_expired();
+        } else {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// One gather pass: walk `items` front-to-back, shedding expired
+/// entries and moving entries whose bucket matches `key` into `batch`
+/// (in queue order), until `batch` holds `max_batch`.  Entries of other
+/// buckets are left in place, in order.
+pub(crate) fn take_compatible(
+    items: &mut VecDeque<Pending>,
+    batch: &mut Vec<Pending>,
+    key: &BucketKey,
+    max_batch: usize,
+    now: Instant,
+) {
+    let mut i = 0;
+    while i < items.len() && batch.len() < max_batch {
+        if items[i].req.expired(now) {
+            items.remove(i).expect("index in bounds").shed_expired();
+        } else if BucketKey::of(&items[i].req) == *key {
+            batch.push(items.remove(i).expect("index in bounds"));
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// The dispatcher's blocking gather: pop a leader (blocks while the
+/// queue is open and empty), then coalesce its bucket until `max_batch`
+/// or the `max_wait` timer.  `None` = queue closed and fully drained.
+pub(crate) fn next_batch(queue: &Queue, cfg: &ServeConfig) -> Option<Vec<Pending>> {
+    let leader = queue.pop_leader()?;
+    let _span = crate::obs::span("serve", "gather");
+    let key = BucketKey::of(&leader.req);
+    let until = Instant::now() + cfg.max_wait;
+    let mut batch = vec![leader];
+    loop {
+        queue.take_compatible(&mut batch, &key, cfg.max_batch);
+        if batch.len() >= cfg.max_batch || !queue.wait_for_arrival(until) {
+            return Some(batch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use super::super::{Head, Outcome, ShedReason, Ticket, TicketState};
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn request(id: u64, kind: ModelKind, n: usize, deadline: Option<Instant>) -> Request {
+        Request {
+            id,
+            kind,
+            heads: vec![Head {
+                q: Matrix::zeros(n, 3),
+                k: Matrix::zeros(4, 3),
+                v: Matrix::zeros(4, 2),
+            }],
+            deadline,
+        }
+    }
+
+    fn pending(req: Request) -> (Pending, Ticket) {
+        let state = Arc::new(TicketState::default());
+        (Pending::new(req, Arc::clone(&state)), Ticket(state))
+    }
+
+    #[test]
+    fn bucket_key_separates_kind_and_shape() {
+        let a = request(0, ModelKind::Exact, 8, None);
+        let b = request(1, ModelKind::Kernelized, 8, None);
+        let c = request(2, ModelKind::Exact, 9, None);
+        let d = request(3, ModelKind::Exact, 8, None);
+        assert_ne!(BucketKey::of(&a), BucketKey::of(&b));
+        assert_ne!(BucketKey::of(&a), BucketKey::of(&c));
+        assert_eq!(BucketKey::of(&a), BucketKey::of(&d));
+    }
+
+    #[test]
+    fn pop_leader_sheds_expired_prefix() {
+        let now = Instant::now();
+        let past = Some(now - Duration::from_millis(1));
+        let mut items = VecDeque::new();
+        let (p1, t1) = pending(request(1, ModelKind::Exact, 8, past));
+        let (p2, _t2) = pending(request(2, ModelKind::Exact, 8, None));
+        items.push_back(p1);
+        items.push_back(p2);
+        let leader = pop_leader(&mut items, now).unwrap();
+        assert_eq!(leader.req.id, 2);
+        assert!(matches!(t1.wait(), Outcome::Shed(ShedReason::DeadlineExpired)));
+        assert!(items.is_empty());
+    }
+
+    #[test]
+    fn take_compatible_is_fifo_within_bucket_and_leaves_others() {
+        let now = Instant::now();
+        let mut items = VecDeque::new();
+        let mut tickets = Vec::new();
+        // interleave two buckets: exact ids 1,3,5 / kernelized ids 2,4
+        for id in 1..=5u64 {
+            let kind = if id % 2 == 1 { ModelKind::Exact } else { ModelKind::Kernelized };
+            let (p, t) = pending(request(id, kind, 8, None));
+            items.push_back(p);
+            tickets.push(t);
+        }
+        let key = BucketKey::of(&request(0, ModelKind::Exact, 8, None));
+        let mut batch = Vec::new();
+        take_compatible(&mut items, &mut batch, &key, 8, now);
+        let got: Vec<u64> = batch.iter().map(|p| p.req.id).collect();
+        assert_eq!(got, vec![1, 3, 5], "FIFO within the bucket");
+        let left: Vec<u64> = items.iter().map(|p| p.req.id).collect();
+        assert_eq!(left, vec![2, 4], "other buckets untouched, in order");
+    }
+
+    #[test]
+    fn take_compatible_respects_max_batch() {
+        let now = Instant::now();
+        let mut items = VecDeque::new();
+        let mut tickets = Vec::new();
+        for id in 0..10u64 {
+            let (p, t) = pending(request(id, ModelKind::Exact, 8, None));
+            items.push_back(p);
+            tickets.push(t);
+        }
+        let key = BucketKey::of(&request(0, ModelKind::Exact, 8, None));
+        let mut batch = Vec::new();
+        take_compatible(&mut items, &mut batch, &key, 4, now);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(items.len(), 6);
+        // the four taken are the four oldest
+        assert_eq!(batch.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    /// Randomized sweep over queue contents: for any mix of buckets,
+    /// expiry states, and `max_batch`, one gather pass must (a) never
+    /// exceed `max_batch`, (b) take only live key-matching entries in
+    /// FIFO order, (c) keep everything it leaves behind in order, and
+    /// (d) drop an entry only by shedding it as expired.
+    #[test]
+    fn prop_gather_pass_invariants() {
+        for case in 0..200u64 {
+            let mut rng = crate::util::rng::Rng::new(case);
+            let now = Instant::now();
+            let past = Some(now - Duration::from_millis(1));
+            let len = rng.below(24);
+            let mut items = VecDeque::new();
+            let mut tickets = Vec::new();
+            let mut expired_ids = Vec::new();
+            for id in 0..len as u64 {
+                let kind = if rng.below(2) == 0 { ModelKind::Exact } else { ModelKind::Kernelized };
+                let n = [6, 8, 9][rng.below(3)];
+                let deadline = if rng.below(4) == 0 {
+                    expired_ids.push(id);
+                    past
+                } else {
+                    None
+                };
+                let (p, t) = pending(request(id, kind, n, deadline));
+                items.push_back(p);
+                tickets.push(t);
+            }
+            let key = BucketKey::of(&request(u64::MAX, ModelKind::Exact, 8, None));
+            let max_batch = 1 + rng.below(6);
+            let mut batch = Vec::new();
+            take_compatible(&mut items, &mut batch, &key, max_batch, now);
+
+            assert!(batch.len() <= max_batch, "case {case}: batch over max_batch");
+            let batch_ids: Vec<u64> = batch.iter().map(|p| p.req.id).collect();
+            let left_ids: Vec<u64> = items.iter().map(|p| p.req.id).collect();
+            assert!(
+                batch_ids.windows(2).all(|w| w[0] < w[1]),
+                "case {case}: batch not FIFO: {batch_ids:?}"
+            );
+            assert!(
+                left_ids.windows(2).all(|w| w[0] < w[1]),
+                "case {case}: remainder reordered: {left_ids:?}"
+            );
+            for p in &batch {
+                assert_eq!(BucketKey::of(&p.req), key, "case {case}: foreign bucket in batch");
+                assert!(!p.req.expired(now), "case {case}: expired entry served");
+            }
+            // ids are assigned 0..len, so set arithmetic over Vec works
+            for id in 0..len as u64 {
+                let kept = batch_ids.contains(&id) || left_ids.contains(&id);
+                if !kept {
+                    assert!(
+                        expired_ids.contains(&id),
+                        "case {case}: live request {id} vanished without shedding"
+                    );
+                    assert!(
+                        matches!(
+                            tickets[id as usize].poll(),
+                            Some(Outcome::Shed(ShedReason::DeadlineExpired))
+                        ),
+                        "case {case}: dropped entry {id} not resolved as deadline shed"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn take_compatible_sheds_expired_of_any_bucket() {
+        let now = Instant::now();
+        let past = Some(now - Duration::from_millis(1));
+        let mut items = VecDeque::new();
+        let (p1, t1) = pending(request(1, ModelKind::Kernelized, 8, past));
+        let (p2, _t2) = pending(request(2, ModelKind::Exact, 8, None));
+        items.push_back(p1);
+        items.push_back(p2);
+        let key = BucketKey::of(&request(0, ModelKind::Exact, 8, None));
+        let mut batch = Vec::new();
+        take_compatible(&mut items, &mut batch, &key, 8, now);
+        assert!(matches!(t1.wait(), Outcome::Shed(ShedReason::DeadlineExpired)));
+        assert_eq!(batch.len(), 1);
+        assert!(items.is_empty());
+    }
+}

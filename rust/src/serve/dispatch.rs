@@ -1,0 +1,144 @@
+//! The dispatcher: the single thread that turns gathered batches into
+//! pool jobs and resolves tickets.
+//!
+//! One batch = one call into the batched kernels = one `run_rows`
+//! submission, regardless of how many requests × heads the batch holds.
+//! Keeping all kernel submission on this one thread also means the
+//! serving layer can never trip the pool's one-job-at-a-time submit
+//! lock from two sides.
+
+use std::time::Instant;
+
+use crate::kernels::{self, AttnItem, KernelCtx};
+use crate::obs;
+
+use super::queue::{Pending, Queue};
+use super::{ModelKind, ServeConfig};
+
+/// Dispatcher main loop: gather → dispatch until the queue is closed
+/// and drained.  Every `Pending` that leaves the queue is resolved in
+/// here (completed or shed) before the next batch is gathered.
+pub(crate) fn run(queue: &Queue, cfg: &ServeConfig, ctx: KernelCtx) {
+    while let Some(batch) = super::batcher::next_batch(queue, cfg) {
+        run_batch(ctx, batch);
+    }
+}
+
+/// Run one gathered batch: last-instant deadline check, one batched
+/// kernel call for every surviving head, resolve every ticket.
+pub(crate) fn run_batch(ctx: KernelCtx, batch: Vec<Pending>) {
+    let _span = obs::span("serve", "dispatch");
+    // gather→dispatch handoff is the last place shedding is cheap: a
+    // request whose deadline passed while the batch was forming costs
+    // nothing here, but would cost a full compute share one line later
+    let now = Instant::now();
+    let (expired, live): (Vec<Pending>, Vec<Pending>) =
+        batch.into_iter().partition(|p| p.req.expired(now));
+    for p in expired {
+        p.shed_expired();
+    }
+    if live.is_empty() {
+        return;
+    }
+    obs::observe("serve_batch_size", live.len() as f64);
+    obs::counter_add("serve_batches_total", 1);
+
+    let kind = live[0].req.kind;
+    let items: Vec<AttnItem> = live
+        .iter()
+        .flat_map(|p| p.req.heads.iter().map(|h| AttnItem { q: &h.q, k: &h.k, v: &h.v }))
+        .collect();
+    let outputs = match kind {
+        ModelKind::Exact => kernels::batched_softmax_attention(ctx, &items),
+        ModelKind::Kernelized => kernels::batched_kernelized_attention(ctx, &items),
+    };
+
+    let mut outputs = outputs.into_iter();
+    for p in live {
+        let per_req: Vec<_> = outputs.by_ref().take(p.req.heads.len()).collect();
+        debug_assert_eq!(per_req.len(), p.req.heads.len());
+        p.complete(per_req);
+    }
+    debug_assert!(outputs.next().is_none(), "every head output consumed");
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use super::super::{Head, ModelKind, Outcome, Request, ShedReason, Ticket, TicketState};
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn request(id: u64, kind: ModelKind, heads: usize, deadline: Option<Instant>) -> Request {
+        let mut rng = Rng::new(100 + id);
+        let heads = (0..heads)
+            .map(|_| Head {
+                q: Matrix::randn(&mut rng, 6, 4, 0.5),
+                k: Matrix::randn(&mut rng, 5, 4, 0.5),
+                v: Matrix::randn(&mut rng, 5, 3, 1.0),
+            })
+            .collect();
+        Request { id, kind, heads, deadline }
+    }
+
+    fn pending(req: Request) -> (Pending, Ticket) {
+        let state = Arc::new(TicketState::default());
+        (Pending::new(req, Arc::clone(&state)), Ticket(state))
+    }
+
+    #[test]
+    fn run_batch_completes_live_and_sheds_expired() {
+        let ctx = KernelCtx::with_threads(2);
+        let past = Some(Instant::now() - Duration::from_millis(1));
+        let (p1, t1) = pending(request(1, ModelKind::Exact, 2, None));
+        let (p2, t2) = pending(request(2, ModelKind::Exact, 1, past));
+        let (p3, t3) = pending(request(3, ModelKind::Exact, 3, None));
+        run_batch(ctx, vec![p1, p2, p3]);
+        match t1.wait() {
+            Outcome::Completed { outputs } => assert_eq!(outputs.len(), 2),
+            other => panic!("expected completion, got {other:?}"),
+        }
+        assert!(matches!(t2.wait(), Outcome::Shed(ShedReason::DeadlineExpired)));
+        match t3.wait() {
+            Outcome::Completed { outputs } => {
+                assert_eq!(outputs.len(), 3);
+                assert_eq!((outputs[0].rows, outputs[0].cols), (6, 3));
+            }
+            other => panic!("expected completion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_batch_output_matches_per_request_attention_bitwise() {
+        let ctx = KernelCtx::with_threads(4);
+        for kind in [ModelKind::Exact, ModelKind::Kernelized] {
+            let req = request(9, kind, 2, None);
+            let want: Vec<Matrix> = req
+                .heads
+                .iter()
+                .map(|h| match kind {
+                    ModelKind::Exact => {
+                        crate::attention::exact::softmax_attention_in(ctx, &h.q, &h.k, &h.v)
+                    }
+                    ModelKind::Kernelized => {
+                        crate::attention::exact::kernelized_attention_in(ctx, &h.q, &h.k, &h.v)
+                    }
+                })
+                .collect();
+            let (p, t) = pending(req);
+            run_batch(ctx, vec![p]);
+            let Outcome::Completed { outputs } = t.wait() else {
+                panic!("expected completion")
+            };
+            for (got, want) in outputs.iter().zip(&want) {
+                assert_eq!(got.rows, want.rows);
+                for (x, y) in got.data.iter().zip(&want.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{kind:?}");
+                }
+            }
+        }
+    }
+}

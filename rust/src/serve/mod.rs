@@ -1,0 +1,371 @@
+//! Inference serving subsystem: bounded admission queue, dynamic
+//! micro-batching, and deadline-aware batched dispatch (SERVING.md).
+//!
+//! The request path is three stages, each observable:
+//!
+//! 1. **Admission** ([`queue`]) — a bounded FIFO with backpressure.
+//!    [`Server::submit`] never blocks: a full queue rejects with
+//!    [`RejectReason::QueueFull`], a closed server with
+//!    [`RejectReason::ShuttingDown`], a bad request with
+//!    [`RejectReason::Malformed`].  Accepted requests return a
+//!    [`Ticket`] the client blocks on.
+//! 2. **Batching** ([`batcher`]) — the dispatcher pops the oldest live
+//!    request (the *leader*) and coalesces compatible requests — same
+//!    [`batcher::BucketKey`]: model kind + attention shape — behind it,
+//!    FIFO within the bucket, until `max_batch` requests or the
+//!    `max_wait` timer, whichever first.  Requests whose deadline passed
+//!    are shed ([`ShedReason::DeadlineExpired`]) wherever they are met,
+//!    before any compute is spent on them.
+//! 3. **Dispatch** ([`dispatch`]) — every head of every request in the
+//!    batch becomes one [`crate::kernels::AttnItem`] and the whole batch
+//!    runs as **one** pool job via
+//!    [`crate::kernels::batched_softmax_attention`] /
+//!    [`crate::kernels::batched_kernelized_attention`].  Because each
+//!    output row's arithmetic depends only on its own head, results are
+//!    bit-identical to per-request dispatch no matter how the timer
+//!    happened to slice batches — throughput from batching, bytes as if
+//!    unbatched.
+//!
+//! [`Server::shutdown`] closes admission and *drains*: everything
+//! already admitted still completes (or sheds on its deadline) before
+//! the dispatcher exits.  Every accepted ticket resolves — completed,
+//! shed, or (only if the server is torn down abnormally)
+//! [`ShedReason::Dropped`]; `skyformer serve-bench` asserts the
+//! zero-lost-requests invariant end to end.
+//!
+//! Metrics (OBSERVABILITY.md): `serve_queue_depth`, `serve_batch_size`,
+//! `serve_request_latency_seconds`, `serve_rejects_total`,
+//! `serve_deadline_sheds_total`, `serve_completed_total`,
+//! `serve_batches_total`; spans under the `serve` category for the
+//! gather and dispatch stages.
+
+pub mod batcher;
+pub mod dispatch;
+pub mod queue;
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::kernels::KernelCtx;
+use crate::linalg::Matrix;
+
+/// Which attention path a request runs (the serving-facing subset of
+/// the Figure-1 methods: the two exact quadratic paths the batched
+/// kernels implement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// `softmax(q k^T) v` via the fused batched softmax kernel.
+    Exact,
+    /// Gaussian Kernelized Attention (paper Eq. 3), un-normalised.
+    Kernelized,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s {
+            "exact" | "softmax" => Some(ModelKind::Exact),
+            "kernelized" | "gaussian" => Some(ModelKind::Kernelized),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Exact => "exact",
+            ModelKind::Kernelized => "kernelized",
+        }
+    }
+}
+
+/// One attention head's inputs: `q (n x p)`, `k (m x p)`, `v (m x dv)`.
+#[derive(Debug, Clone)]
+pub struct Head {
+    pub q: Matrix,
+    pub k: Matrix,
+    pub v: Matrix,
+}
+
+/// One inference request: all heads must share one attention shape
+/// (checked at admission), but head *count* may differ between requests
+/// in the same batch.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Client-chosen id, echoed in the outcome path for bookkeeping.
+    pub id: u64,
+    pub kind: ModelKind,
+    pub heads: Vec<Head>,
+    /// Absolute deadline; `None` means never shed.  A request past its
+    /// deadline is shed wherever the pipeline next touches it — at
+    /// leader pop, batch gather, or the final pre-compute check.
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    /// True iff the deadline exists and has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Why an accepted request was resolved without outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The deadline passed before compute was spent on the request.
+    DeadlineExpired,
+    /// The server was torn down abnormally with the request still
+    /// queued (never happens on a graceful [`Server::shutdown`] drain).
+    Dropped,
+}
+
+/// Why a request was refused at admission (the request never entered
+/// the queue; no ticket exists).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue is at capacity — backpressure; retry later.
+    QueueFull,
+    /// [`Server::shutdown`] has closed admission.
+    ShuttingDown,
+    /// The request fails shape validation (the message says how).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "queue full"),
+            RejectReason::ShuttingDown => write!(f, "shutting down"),
+            RejectReason::Malformed(why) => write!(f, "malformed request: {why}"),
+        }
+    }
+}
+
+/// Terminal state of an accepted request.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// One output matrix per head, in head order.
+    Completed { outputs: Vec<Matrix> },
+    Shed(ShedReason),
+}
+
+/// Set-once resolution slot a [`Ticket`] blocks on.
+#[derive(Debug, Default)]
+pub(crate) struct TicketState {
+    slot: Mutex<Option<Outcome>>,
+    done: Condvar,
+}
+
+impl TicketState {
+    /// First resolution wins; later calls are no-ops (this is what lets
+    /// [`queue::Pending`]'s drop safety-net coexist with explicit
+    /// completion).
+    pub(crate) fn resolve(&self, outcome: Outcome) {
+        let mut slot = self.slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(outcome);
+            self.done.notify_all();
+        }
+    }
+}
+
+/// The client's handle on an accepted request.
+#[derive(Debug, Clone)]
+pub struct Ticket(pub(crate) Arc<TicketState>);
+
+impl Ticket {
+    /// Block until the request resolves.  Every accepted request
+    /// resolves: completion and deadline shedding in the normal course,
+    /// [`ShedReason::Dropped`] as the teardown safety-net.
+    pub fn wait(&self) -> Outcome {
+        let mut slot = self.0.slot.lock().unwrap();
+        loop {
+            if let Some(outcome) = slot.clone() {
+                return outcome;
+            }
+            slot = self.0.done.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking probe.
+    pub fn poll(&self) -> Option<Outcome> {
+        self.0.slot.lock().unwrap().clone()
+    }
+}
+
+/// Serving knobs (SERVING.md walks through the trade-offs).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Admission bound: requests beyond this are rejected
+    /// ([`RejectReason::QueueFull`]), never silently queued.
+    pub queue_capacity: usize,
+    /// Largest number of *requests* coalesced into one batch (heads
+    /// within a request don't count against this; they always travel
+    /// together).
+    pub max_batch: usize,
+    /// How long a batch leader waits for company before dispatching
+    /// under-full.  Bounds the batching latency tax on a quiet server.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_capacity: 256,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// A running serving instance: one admission queue + one dispatcher
+/// thread.  The dispatcher is the only thread that submits pool jobs,
+/// so each batch is exactly one `run_rows` submission and the pool's
+/// one-job-at-a-time invariant holds by construction.
+pub struct Server {
+    queue: Arc<queue::Queue>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the dispatcher and open admission.
+    pub fn start(cfg: ServeConfig, ctx: KernelCtx) -> Server {
+        assert!(cfg.queue_capacity > 0, "queue_capacity must be > 0");
+        assert!(cfg.max_batch > 0, "max_batch must be > 0");
+        let queue = Arc::new(queue::Queue::new(cfg.queue_capacity));
+        let q = Arc::clone(&queue);
+        let dispatcher = std::thread::Builder::new()
+            .name("serve-dispatch".into())
+            .spawn(move || dispatch::run(&q, &cfg, ctx))
+            .expect("spawn serve dispatcher");
+        Server { queue, dispatcher: Some(dispatcher) }
+    }
+
+    /// Admit a request (non-blocking).  `Ok` hands back the ticket to
+    /// wait on; `Err` means the request never entered the system.
+    pub fn submit(&self, req: Request) -> Result<Ticket, RejectReason> {
+        if let Err(why) = validate(&req) {
+            crate::obs::counter_add("serve_rejects_total", 1);
+            return Err(RejectReason::Malformed(why));
+        }
+        let state = Arc::new(TicketState::default());
+        let pending = queue::Pending::new(req, Arc::clone(&state));
+        self.queue.push(pending)?;
+        Ok(Ticket(state))
+    }
+
+    /// Close admission and drain: blocks until every already-admitted
+    /// request has resolved and the dispatcher has exited.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.queue.close();
+        if let Some(handle) = self.dispatcher.take() {
+            if handle.join().is_err() {
+                // the dispatcher panicked; queued tickets resolve as
+                // Dropped via Pending's drop safety-net when the queue
+                // is torn down — nobody deadlocks on wait()
+                eprintln!("serve: dispatcher thread panicked during drain");
+            }
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Admission-time shape validation — the dispatcher may assert shapes,
+/// the admission edge must not panic on client input.
+fn validate(req: &Request) -> Result<(), &'static str> {
+    let Some(first) = req.heads.first() else {
+        return Err("request has no heads");
+    };
+    let dims = |h: &Head| (h.q.rows, h.k.rows, h.q.cols, h.v.cols);
+    let want = dims(first);
+    for h in &req.heads {
+        if h.q.cols != h.k.cols {
+            return Err("head q/k width mismatch");
+        }
+        if h.k.rows != h.v.rows {
+            return Err("head k/v length mismatch");
+        }
+        if h.q.rows == 0 || h.k.rows == 0 || h.q.cols == 0 || h.v.cols == 0 {
+            return Err("head has an empty dimension");
+        }
+        if dims(h) != want {
+            return Err("heads of one request must share one shape");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head(n: usize, m: usize, p: usize, dv: usize) -> Head {
+        let mut rng = crate::util::rng::Rng::new(5);
+        Head {
+            q: Matrix::randn(&mut rng, n, p, 0.5),
+            k: Matrix::randn(&mut rng, m, p, 0.5),
+            v: Matrix::randn(&mut rng, m, dv, 1.0),
+        }
+    }
+
+    #[test]
+    fn model_kind_parse_roundtrip() {
+        for kind in [ModelKind::Exact, ModelKind::Kernelized] {
+            assert_eq!(ModelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ModelKind::parse("nystrom"), None);
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let ok = Request {
+            id: 0,
+            kind: ModelKind::Exact,
+            heads: vec![head(4, 6, 3, 2), head(4, 6, 3, 2)],
+            deadline: None,
+        };
+        assert!(validate(&ok).is_ok());
+        assert!(validate(&Request { heads: vec![], ..ok.clone() }).is_err());
+        assert!(validate(&Request {
+            heads: vec![head(4, 6, 3, 2), head(5, 6, 3, 2)],
+            ..ok.clone()
+        })
+        .is_err());
+        let mut bad = head(4, 6, 3, 2);
+        bad.k = Matrix::zeros(6, 9);
+        assert!(validate(&Request { heads: vec![bad], ..ok }).is_err());
+    }
+
+    #[test]
+    fn ticket_resolves_once() {
+        let state = Arc::new(TicketState::default());
+        let t = Ticket(Arc::clone(&state));
+        state.resolve(Outcome::Shed(ShedReason::DeadlineExpired));
+        state.resolve(Outcome::Shed(ShedReason::Dropped));
+        match t.wait() {
+            Outcome::Shed(ShedReason::DeadlineExpired) => {}
+            other => panic!("first resolution should win, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expired_logic() {
+        let now = Instant::now();
+        let req = Request {
+            id: 1,
+            kind: ModelKind::Exact,
+            heads: vec![head(2, 2, 2, 2)],
+            deadline: Some(now),
+        };
+        assert!(req.expired(now));
+        assert!(!Request { deadline: None, ..req.clone() }.expired(now));
+        assert!(!Request { deadline: Some(now + Duration::from_secs(1)), ..req }.expired(now));
+    }
+}

@@ -1,0 +1,244 @@
+//! Bounded admission queue with backpressure — the only mutable state
+//! the serving subsystem shares between client threads and the
+//! dispatcher.
+//!
+//! Invariants:
+//!
+//! * Capacity is a hard bound: [`Queue::push`] rejects (QueueFull /
+//!   ShuttingDown) instead of blocking or growing — admission latency
+//!   is O(lock), never O(traffic).
+//! * Every [`Pending`] that enters the queue resolves its ticket
+//!   exactly once.  The normal paths (complete / shed) resolve
+//!   explicitly; a drop safety-net resolves anything else as
+//!   [`ShedReason::Dropped`], so a client blocked on
+//!   [`super::Ticket::wait`] can never deadlock on a torn-down server.
+//! * `serve_queue_depth` tracks the live length on every transition.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::obs;
+
+use super::{Outcome, RejectReason, Request, ShedReason, TicketState};
+
+/// An admitted request travelling through the pipeline: the request,
+/// its ticket, and its admission timestamp (the latency clock).
+#[derive(Debug)]
+pub(crate) struct Pending {
+    pub req: Request,
+    pub enqueued: Instant,
+    ticket: Arc<TicketState>,
+}
+
+impl Pending {
+    pub(crate) fn new(req: Request, ticket: Arc<TicketState>) -> Pending {
+        Pending { req, enqueued: Instant::now(), ticket }
+    }
+
+    /// Resolve with outputs and record the request's end-to-end latency.
+    pub(crate) fn complete(self, outputs: Vec<crate::linalg::Matrix>) {
+        obs::observe("serve_request_latency_seconds", self.enqueued.elapsed().as_secs_f64());
+        obs::counter_add("serve_completed_total", 1);
+        self.ticket.resolve(Outcome::Completed { outputs });
+    }
+
+    /// Resolve as shed (deadline passed before compute).
+    pub(crate) fn shed_expired(self) {
+        obs::counter_add("serve_deadline_sheds_total", 1);
+        self.ticket.resolve(Outcome::Shed(ShedReason::DeadlineExpired));
+    }
+}
+
+impl Drop for Pending {
+    fn drop(&mut self) {
+        // safety-net: resolve() is set-once, so this is a no-op after
+        // complete()/shed_expired() and only bites when a Pending is
+        // discarded un-resolved (abnormal teardown, dispatcher panic)
+        self.ticket.resolve(Outcome::Shed(ShedReason::Dropped));
+    }
+}
+
+struct Inner {
+    items: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Bounded MPSC queue: many client threads push, the one dispatcher
+/// thread pops/scans under the same lock via the [`super::batcher`]
+/// planning functions.
+pub struct Queue {
+    inner: Mutex<Inner>,
+    arrived: Condvar,
+    capacity: usize,
+}
+
+impl Queue {
+    pub(crate) fn new(capacity: usize) -> Queue {
+        Queue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            arrived: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Admit or reject, never block.  On rejection the pending's ticket
+    /// was never handed to a client (submit returns the error instead),
+    /// so its drop-resolution is unobservable.
+    pub(crate) fn push(&self, p: Pending) -> Result<(), RejectReason> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            obs::counter_add("serve_rejects_total", 1);
+            return Err(RejectReason::ShuttingDown);
+        }
+        if inner.items.len() >= self.capacity {
+            obs::counter_add("serve_rejects_total", 1);
+            return Err(RejectReason::QueueFull);
+        }
+        inner.items.push_back(p);
+        obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
+        self.arrived.notify_one();
+        Ok(())
+    }
+
+    /// Block until a live (non-expired) leader is available and pop it;
+    /// `None` once the queue is closed *and* drained — the dispatcher's
+    /// exit condition.  Expired requests are shed on the way.
+    pub(crate) fn pop_leader(&self) -> Option<Pending> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let leader = super::batcher::pop_leader(&mut inner.items, Instant::now());
+            obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
+            if let Some(p) = leader {
+                return Some(p);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.arrived.wait(inner).unwrap();
+        }
+    }
+
+    /// One gather pass: move queued requests compatible with `key` into
+    /// `batch` (FIFO within the bucket), shedding any expired entry
+    /// scanned, until `batch` holds `max_batch` requests.
+    pub(crate) fn take_compatible(
+        &self,
+        batch: &mut Vec<Pending>,
+        key: &super::batcher::BucketKey,
+        max_batch: usize,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        super::batcher::take_compatible(&mut inner.items, batch, key, max_batch, Instant::now());
+        obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
+    }
+
+    /// Park until something arrives or `until` passes.  Returns false
+    /// when the wait is pointless (timer expired, or closed with an
+    /// empty queue) — the batcher then dispatches what it has.
+    pub(crate) fn wait_for_arrival(&self, until: Instant) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.items.is_empty() {
+                return true;
+            }
+            if inner.closed {
+                return false;
+            }
+            let now = Instant::now();
+            let Some(left) = until.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+                return false;
+            };
+            let (guard, timeout) = self.arrived.wait_timeout(inner, left).unwrap();
+            inner = guard;
+            if timeout.timed_out() {
+                return !inner.items.is_empty();
+            }
+        }
+    }
+
+    /// Close admission (push rejects from now on) and wake the
+    /// dispatcher so it drains and exits.
+    pub(crate) fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.arrived.notify_all();
+    }
+
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Head, ModelKind, ShedReason, Ticket};
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn request(id: u64) -> Request {
+        Request {
+            id,
+            kind: ModelKind::Exact,
+            heads: vec![Head {
+                q: Matrix::zeros(2, 2),
+                k: Matrix::zeros(2, 2),
+                v: Matrix::zeros(2, 2),
+            }],
+            deadline: None,
+        }
+    }
+
+    fn pending(id: u64) -> (Pending, Ticket) {
+        let state = Arc::new(TicketState::default());
+        (Pending::new(request(id), Arc::clone(&state)), Ticket(state))
+    }
+
+    #[test]
+    fn bounded_push_rejects_when_full() {
+        let q = Queue::new(2);
+        let (p1, _t1) = pending(1);
+        let (p2, _t2) = pending(2);
+        let (p3, _t3) = pending(3);
+        assert!(q.push(p1).is_ok());
+        assert!(q.push(p2).is_ok());
+        assert!(matches!(q.push(p3), Err(RejectReason::QueueFull)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn closed_push_rejects_shutting_down() {
+        let q = Queue::new(4);
+        q.close();
+        let (p, _t) = pending(1);
+        assert!(matches!(q.push(p), Err(RejectReason::ShuttingDown)));
+    }
+
+    #[test]
+    fn pop_leader_drains_then_returns_none_when_closed() {
+        let q = Queue::new(4);
+        let (p, _t) = pending(7);
+        q.push(p).unwrap();
+        q.close();
+        assert_eq!(q.pop_leader().unwrap().req.id, 7);
+        assert!(q.pop_leader().is_none());
+    }
+
+    #[test]
+    fn dropped_pending_resolves_ticket() {
+        let (p, t) = pending(1);
+        drop(p);
+        match t.wait() {
+            Outcome::Shed(ShedReason::Dropped) => {}
+            other => panic!("expected Dropped, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_for_arrival_times_out_on_empty_queue() {
+        let q = Queue::new(4);
+        let until = Instant::now() + std::time::Duration::from_millis(5);
+        assert!(!q.wait_for_arrival(until));
+    }
+}

@@ -1,0 +1,186 @@
+//! End-to-end tests of the serving subsystem through its public API:
+//! admission, micro-batching, deadline shedding, graceful drain — and
+//! the load-bearing guarantee that batched dispatch is **bit-identical**
+//! to per-request dispatch, for every schedule (thread count × pool
+//! mode) and any batch composition the timing happens to produce.
+//! That guarantee is what makes the timing-dependent micro-batcher safe
+//! to put in front of deterministic kernels (SERVING.md).
+
+use std::time::{Duration, Instant};
+
+use skyformer::attention::exact;
+use skyformer::kernels::{self, pool, KernelCtx};
+use skyformer::linalg::Matrix;
+use skyformer::serve::{
+    Head, ModelKind, Outcome, RejectReason, Request, ServeConfig, Server, ShedReason,
+};
+use skyformer::util::rng::Rng;
+
+/// A request derived purely from `(seed, id)` — resubmittable and
+/// recomputable without coordination.
+fn gen_request(
+    seed: u64,
+    id: u64,
+    kind: ModelKind,
+    (n, m, p, dv): (usize, usize, usize, usize),
+    heads: usize,
+) -> Request {
+    let root = Rng::new(seed).split(id);
+    let heads = (0..heads)
+        .map(|h| {
+            let mut r = root.split(h as u64 + 1);
+            Head {
+                q: Matrix::randn(&mut r, n, p, 0.5),
+                k: Matrix::randn(&mut r, m, p, 0.5),
+                v: Matrix::randn(&mut r, m, dv, 1.0),
+            }
+        })
+        .collect();
+    Request { id, kind, heads, deadline: None }
+}
+
+/// Per-request (unbatched) reference outputs under a fixed 1-thread
+/// scoped schedule — the oracle every served output must equal bitwise.
+fn reference_outputs(req: &Request) -> Vec<Matrix> {
+    let ctx = KernelCtx::with_threads(1).with_mode(pool::Mode::Scoped);
+    req.heads
+        .iter()
+        .map(|h| match req.kind {
+            ModelKind::Exact => exact::softmax_attention_in(ctx, &h.q, &h.k, &h.v),
+            ModelKind::Kernelized => exact::kernelized_attention_in(ctx, &h.q, &h.k, &h.v),
+        })
+        .collect()
+}
+
+fn assert_bitwise_eq(got: &[Matrix], want: &[Matrix], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: head count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(kernels::digest(g), kernels::digest(w), "{what}: outputs differ bitwise");
+    }
+}
+
+/// The shape/kind mix used by the end-to-end tests: two bucket shapes ×
+/// two model kinds × varying head counts, so batching has real
+/// coalescing decisions to make.
+fn mixed_request(seed: u64, id: u64) -> Request {
+    let kind = if id % 2 == 0 { ModelKind::Exact } else { ModelKind::Kernelized };
+    let shape = if id % 3 == 0 { (12, 10, 5, 4) } else { (8, 8, 4, 4) };
+    gen_request(seed, id, kind, shape, 1 + (id as usize % 3))
+}
+
+#[test]
+fn served_outputs_bit_identical_to_unbatched_across_schedules() {
+    for mode in [pool::Mode::Scoped, pool::Mode::Pinned] {
+        for threads in [1usize, 4] {
+            let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+            let cfg = ServeConfig {
+                queue_capacity: 64,
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            };
+            let server = Server::start(cfg, ctx);
+            let requests: Vec<Request> = (0..16).map(|id| mixed_request(7, id)).collect();
+            let tickets: Vec<_> = requests
+                .iter()
+                .map(|r| server.submit(r.clone()).expect("admission"))
+                .collect();
+            for (req, ticket) in requests.iter().zip(&tickets) {
+                match ticket.wait() {
+                    Outcome::Completed { outputs } => assert_bitwise_eq(
+                        &outputs,
+                        &reference_outputs(req),
+                        &format!("req {} ({mode:?} x{threads})", req.id),
+                    ),
+                    other => panic!("req {} did not complete: {other:?}", req.id),
+                }
+            }
+            server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn shutdown_drains_already_admitted_requests() {
+    let ctx = KernelCtx::with_threads(2).with_mode(pool::Mode::Scoped);
+    let cfg = ServeConfig {
+        queue_capacity: 64,
+        max_batch: 8,
+        max_wait: Duration::from_micros(100),
+    };
+    let server = Server::start(cfg, ctx);
+    let tickets: Vec<_> = (0..12)
+        .map(|id| server.submit(mixed_request(11, id)).expect("admission"))
+        .collect();
+    // shutdown before waiting on anything: drain must complete them all
+    server.shutdown();
+    for (id, t) in tickets.iter().enumerate() {
+        assert!(
+            matches!(t.wait(), Outcome::Completed { .. }),
+            "request {id} not completed by the drain"
+        );
+    }
+}
+
+#[test]
+fn expired_requests_are_shed_not_served() {
+    let ctx = KernelCtx::with_threads(1).with_mode(pool::Mode::Scoped);
+    let server = Server::start(ServeConfig::default(), ctx);
+    let mut req = mixed_request(13, 0);
+    req.deadline = Some(Instant::now() - Duration::from_millis(1));
+    let dead = server.submit(req).expect("expired requests are admitted, shed later");
+    let live = server.submit(mixed_request(13, 1)).expect("admission");
+    assert!(matches!(dead.wait(), Outcome::Shed(ShedReason::DeadlineExpired)));
+    assert!(matches!(live.wait(), Outcome::Completed { .. }));
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_never_enter_the_queue() {
+    let ctx = KernelCtx::with_threads(1).with_mode(pool::Mode::Scoped);
+    let server = Server::start(ServeConfig::default(), ctx);
+    let no_heads = Request { id: 0, kind: ModelKind::Exact, heads: vec![], deadline: None };
+    assert!(matches!(server.submit(no_heads), Err(RejectReason::Malformed(_))));
+    let mut mixed_shapes = mixed_request(17, 0);
+    mixed_shapes.heads = vec![
+        gen_request(17, 1, mixed_shapes.kind, (8, 8, 4, 4), 1).heads.remove(0),
+        gen_request(17, 2, mixed_shapes.kind, (9, 8, 4, 4), 1).heads.remove(0),
+    ];
+    assert!(matches!(server.submit(mixed_shapes), Err(RejectReason::Malformed(_))));
+    server.shutdown();
+}
+
+/// Property sweep: random request mixes and serving knobs — every
+/// accepted request completes with bitwise-reference outputs, whatever
+/// batches the timing produced.
+#[test]
+fn prop_any_batching_schedule_preserves_outputs() {
+    for case in 0..6u64 {
+        let mut rng = Rng::new(case);
+        let threads = 1 + rng.below(4);
+        let mode = if rng.below(2) == 0 { pool::Mode::Scoped } else { pool::Mode::Pinned };
+        let cfg = ServeConfig {
+            queue_capacity: 64,
+            max_batch: 1 + rng.below(6),
+            max_wait: Duration::from_micros(50 + rng.below(2000) as u64),
+        };
+        let ctx = KernelCtx::with_threads(threads).with_mode(mode);
+        let server = Server::start(cfg, ctx);
+        let n_req = 4 + rng.below(12) as u64;
+        let requests: Vec<Request> = (0..n_req).map(|id| mixed_request(100 + case, id)).collect();
+        let tickets: Vec<_> = requests
+            .iter()
+            .map(|r| server.submit(r.clone()).expect("admission"))
+            .collect();
+        for (req, ticket) in requests.iter().zip(&tickets) {
+            match ticket.wait() {
+                Outcome::Completed { outputs } => assert_bitwise_eq(
+                    &outputs,
+                    &reference_outputs(req),
+                    &format!("case {case} req {}", req.id),
+                ),
+                other => panic!("case {case} req {} did not complete: {other:?}", req.id),
+            }
+        }
+        server.shutdown();
+    }
+}

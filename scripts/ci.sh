@@ -32,6 +32,30 @@ SKYFORMER_THREADS=1 SKYFORMER_POOL=scoped cargo test --workspace --release -q
 echo "==> cargo test (offline feature set, SKYFORMER_THREADS=4, pinned pool)"
 SKYFORMER_THREADS=4 SKYFORMER_POOL=pinned cargo test --workspace --release -q
 
+echo "==> portable kernel digests: cross-schedule + fixture gate (always enforcing)"
+PORTABLE_FIXTURE=rust/tests/golden/kernels.portable.digest
+# The portable suite is libm-free, so its committed digests hold on any
+# IEEE-754 platform — this gate hard-fails on mismatch regardless of the
+# fixture's seeded-by provenance (cargo test is warn-only for
+# emulation-seeded fixtures; the enforcement lives here).
+PWANT=$(grep -v '^#' "$PORTABLE_FIXTURE")
+for t in 1 4 8; do
+    for m in scoped pinned; do
+        DIG=$(SKYFORMER_POOL=$m target/release/skyformer kernels --digest --suite portable --threads "$t")
+        if [ "$DIG" != "$PWANT" ]; then
+            echo "portable digests diverged from $PORTABLE_FIXTURE at --threads $t, pool=$m:" >&2
+            diff <(echo "$PWANT") <(echo "$DIG") >&2 || true
+            exit 1
+        fi
+    done
+done
+if python3 -c 'import numpy' 2>/dev/null; then
+    python3 scripts/seed_golden_portable.py --check
+else
+    echo "    (numpy unavailable: skipped the off-host emulation cross-check)"
+fi
+echo "    $(echo "$PWANT" | wc -l | tr -d ' ') portable kernels bit-identical across 6 schedules + fixture"
+
 echo "==> kernel determinism: digest cross-check, threads {1,4,8} x pool {scoped,pinned}"
 FIXTURE=rust/tests/golden/kernels.digest
 # An UNSEEDED fixture means the numeric-drift gate is not enforcing:
@@ -56,11 +80,39 @@ for t in 1 4 8; do
 done
 echo "    $(echo "$WANT" | wc -l | tr -d ' ') kernels bit-identical across 6 schedules + golden fixture"
 
+echo "==> serve-bench smoke: zero lost requests + batched-dispatch digest, both pool backends"
+# --smoke: fixed seed, no deadlines, retry on backpressure, recomputes
+# every completed request unbatched and asserts bitwise equality, and
+# prints a `serve_digest <hex>` line folded over per-request output
+# digests in id order — so it must be byte-identical across thread
+# counts and pool backends no matter what batches the timing produced.
+SERVE_REF=""
+for t in 1 4; do
+    for m in scoped pinned; do
+        OUT=/tmp/BENCH_serve_${t}_${m}.json
+        LINE=$(SKYFORMER_POOL=$m target/release/skyformer serve-bench --smoke \
+            --requests 200 --clients 4 --seq 32,48 --dim 16 --threads "$t" \
+            --out "$OUT" | grep '^serve_digest ')
+        test -s "$OUT"
+        if [ -z "$SERVE_REF" ]; then
+            SERVE_REF="$LINE"
+        elif [ "$LINE" != "$SERVE_REF" ]; then
+            echo "serve digest diverged at --threads $t, pool=$m:" >&2
+            echo "  want: $SERVE_REF" >&2
+            echo "  got:  $LINE" >&2
+            exit 1
+        fi
+    done
+done
+echo "    200-request smoke load: zero lost requests, $SERVE_REF stable across 4 schedules"
+
 echo "==> offline benches smoke-run (bench artifact + obs dump path)"
 cargo bench --bench table2_time -- --out /tmp/BENCH_table2.json
 test -s /tmp/BENCH_table2.json
 cargo bench --bench coordinator_hotpath -- --out /tmp/BENCH_hotpath.json
 test -s /tmp/BENCH_hotpath.json
+cargo bench --bench serve_dispatch -- --budget-ms 80 --out /tmp/BENCH_serve_dispatch.json
+test -s /tmp/BENCH_serve_dispatch.json
 
 if [ "$WITH_PJRT" = 1 ]; then
     echo "==> cargo build --features pjrt"

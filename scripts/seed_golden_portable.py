@@ -1,0 +1,188 @@
+#!/usr/bin/env python3
+"""Seed rust/tests/golden/kernels.portable.digest without a Rust toolchain.
+
+Bit-exact emulation of `skyformer kernels --digest --suite portable`
+(= `kernels::digest_suite_portable(ctx, 96, 42)`): the portable suite is
+restricted to kernels whose data path is pure IEEE-754 f32 `+`/`*` in a
+fixed reduction order (KERNELS.md) — matmul, matmul_transa,
+matmul_transb, scale_add — on Uniform[-1,1) inputs whose generation is
+pure bit manipulation.  Every one of those operations rounds identically
+on any IEEE platform, so numpy float32 (which performs exactly one
+rounding per elementwise op and is never allowed to use FMA here)
+reproduces the Rust outputs bit-for-bit, and the digests below are the
+digests the binary will print.
+
+Emulated, op for op:
+  * util::rng::Rng (SplitMix64): uniform() = (next_u64() >> 40) / 2^24 —
+    a 24-bit integer scaled by a power of two, both steps exact;
+    range_f32(-1, 1) = -1.0 + u * 2.0 — again exact (multiples of 2^-23
+    in [-1, 1) are representable).
+  * kernels::ops::matmul / matmul_transa: per-element strictly
+    increasing-k accumulation (k-panelling never reorders a single
+    element's reduction), one f32 mul + one f32 add per step.
+  * kernels::ops::matmul_transb: tile::dot's fixed lane order — LANES=8
+    accumulators sweep full blocks in increasing block order, lanes
+    combine in increasing-lane order (seeded from 0.0), no tail at
+    n = 96.
+  * kernels::ops::scale_add: fl(fl(alpha*a) + fl(beta*b)) per element.
+  * kernels::digest: order-sensitive FNV-1a over rows, cols, and each
+    f32's zero-extended bit pattern.
+
+The fixture is written with a `# seeded-by: emulation` provenance
+header: rust/tests/golden.rs treats an emulation-seeded fixture as a
+warn-only check under plain `cargo test` (tier-1 stays safe even if
+this emulation were wrong) while scripts/ci.sh hard-fails on any
+mismatch.  Reseeding on a toolchain host (SKYFORMER_GOLDEN_SEED=1)
+upgrades the header to `# seeded-by: host`, which cargo test then
+hard-asserts.
+
+Usage: python3 scripts/seed_golden_portable.py [--check]
+  --check  verify the committed fixture instead of rewriting it
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+N = 96
+SEED = 42
+LANES = 8
+FIXTURE = Path(__file__).resolve().parent.parent / "rust/tests/golden/kernels.portable.digest"
+HEADER = "# seeded-by: emulation (scripts/seed_golden_portable.py)"
+
+f32 = np.float32
+
+
+class Rng:
+    """util::rng::Rng — SplitMix64 with the avalanche-seeded constructor."""
+
+    def __init__(self, seed):
+        self.state = (seed ^ GOLDEN) & MASK
+
+    def next_u64(self):
+        self.state = (self.state + GOLDEN) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+    def uniform(self):
+        # (next_u64() >> 40) as f32 / (1 << 24) as f32 — both exact
+        return f32(self.next_u64() >> 40) / f32(1 << 24)
+
+    def range_f32(self, lo, hi):
+        return f32(lo) + self.uniform() * (f32(hi) - f32(lo))
+
+
+def rand_uniform(rng, rows, cols, lo, hi):
+    """Matrix::rand_uniform — from_fn row-major fill order."""
+    data = np.empty((rows, cols), dtype=f32)
+    for i in range(rows):
+        for j in range(cols):
+            data[i, j] = rng.range_f32(lo, hi)
+    return data
+
+
+def matmul(a, b):
+    """ops::matmul — per element: increasing-k, one rounded mul + add per step."""
+    m, k = a.shape
+    _, n = b.shape
+    c = np.zeros((m, n), dtype=f32)
+    for kx in range(k):
+        c += a[:, kx : kx + 1] * b[kx : kx + 1, :]
+    return c
+
+
+def matmul_transa(a, b):
+    """ops::matmul_transa — out[i,j] = sum_r a[r,i]*b[r,j], increasing r."""
+    k, m = a.shape
+    _, n = b.shape
+    c = np.zeros((m, n), dtype=f32)
+    for r in range(k):
+        c += a[r, :][:, None] * b[r, :][None, :]
+    return c
+
+
+def matmul_transb(a, b):
+    """ops::matmul_transb — out[i,j] = tile::dot(a.row(i), b.row(j))."""
+    m, k = a.shape
+    n = b.shape[0]
+    blocks = k // LANES
+    acc = np.zeros((m, n, LANES), dtype=f32)
+    for c in range(blocks):
+        lo = c * LANES
+        acc += a[:, None, lo : lo + LANES] * b[None, :, lo : lo + LANES]
+    total = np.zeros((m, n), dtype=f32)
+    for l in range(LANES):
+        total = total + acc[:, :, l]
+    for t in range(blocks * LANES, k):  # tail (empty at k=96)
+        total = total + a[:, t][:, None] * b[:, t][None, :]
+    return total
+
+
+def scale_add(a, alpha, b, beta):
+    """ops::scale_add — fl(fl(alpha*a) + fl(beta*b)) per element."""
+    return f32(alpha) * a + f32(beta) * b
+
+
+def digest(mat):
+    """kernels::digest — order-sensitive FNV-1a over shape then bits."""
+    h = 0xCBF29CE484222325
+    prime = 0x100000001B3
+    rows, cols = mat.shape
+    h = ((h ^ rows) * prime) & MASK
+    h = ((h ^ cols) * prime) & MASK
+    bits = np.ascontiguousarray(mat, dtype="<f4").view("<u4").reshape(-1)
+    for x in bits:
+        h = ((h ^ int(x)) * prime) & MASK
+    return h
+
+
+def suite_lines():
+    rng = Rng(SEED)
+    a = rand_uniform(rng, N, N, -1.0, 1.0)
+    b = rand_uniform(rng, N, N, -1.0, 1.0)
+
+    # internal self-checks: the emulation must be consistent with itself
+    # in the same ways the Rust kernels are consistent with their oracles
+    assert a.min() >= -1.0 and a.max() < 1.0, "rand_uniform out of range"
+    ta = matmul(np.ascontiguousarray(a.T), b)
+    ta2 = matmul_transa(a, b)
+    assert (ta.view("<u4") == ta2.view("<u4")).all(), "transa emulation inconsistent"
+    one = np.eye(N, dtype=f32)
+    assert (matmul(a, one).view("<u4") == a.view("<u4")).all(), "matmul identity failed"
+
+    outs = [
+        ("matmul", matmul(a, b)),
+        ("matmul_transa", matmul_transa(a, b)),
+        ("matmul_transb", matmul_transb(a, b)),
+        ("scale_add", scale_add(a, 7.0, b, -1.0)),
+    ]
+    return [f"{name} {digest(m):016x}" for name, m in outs]
+
+
+def main():
+    lines = suite_lines()
+    body = HEADER + "\n" + "\n".join(lines) + "\n"
+    if "--check" in sys.argv[1:]:
+        current = FIXTURE.read_text()
+        got = [l for l in current.splitlines() if not l.startswith("#")]
+        want = [l for l in body.splitlines() if not l.startswith("#")]
+        if got != want:
+            print("portable fixture digests DIFFER from emulation:", file=sys.stderr)
+            print("  fixture :", got, file=sys.stderr)
+            print("  emulated:", want, file=sys.stderr)
+            sys.exit(1)
+        print(f"portable fixture OK ({FIXTURE})")
+        return
+    FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    FIXTURE.write_text(body)
+    print(f"seeded {FIXTURE}:")
+    print(body, end="")
+
+
+if __name__ == "__main__":
+    main()
