@@ -94,8 +94,12 @@ pub(crate) fn next_batch(queue: &Queue, cfg: &ServeConfig) -> Option<Vec<Pending
     let until = Instant::now() + cfg.max_wait;
     let mut batch = vec![leader];
     loop {
-        queue.take_compatible(&mut batch, &key, cfg.max_batch);
-        if batch.len() >= cfg.max_batch || !queue.wait_for_arrival(until) {
+        // `seen` is the arrival generation this gather pass observed;
+        // wait_for_arrival only wakes for pushes newer than it, so a
+        // backlog of incompatible requests blocks here (until the
+        // timer) instead of spinning the loop
+        let seen = queue.take_compatible(&mut batch, &key, cfg.max_batch);
+        if batch.len() >= cfg.max_batch || !queue.wait_for_arrival(until, seen) {
             return Some(batch);
         }
     }

@@ -53,13 +53,23 @@ pub(crate) fn run_batch(ctx: KernelCtx, batch: Vec<Pending>) {
         ModelKind::Kernelized => kernels::batched_kernelized_attention(ctx, &items),
     };
 
+    // hard asserts (release builds too): a count mismatch between the
+    // batch's heads and the kernel's outputs would shift every
+    // subsequent request onto the wrong matrices — fail loudly instead
+    // of completing tickets with misassigned outputs.  A panic here
+    // resolves the remaining tickets as Dropped via Pending's drop
+    // safety-net, so clients don't hang.
     let mut outputs = outputs.into_iter();
     for p in live {
         let per_req: Vec<_> = outputs.by_ref().take(p.req.heads.len()).collect();
-        debug_assert_eq!(per_req.len(), p.req.heads.len());
+        assert_eq!(
+            per_req.len(),
+            p.req.heads.len(),
+            "batched kernel returned fewer outputs than batch heads"
+        );
         p.complete(per_req);
     }
-    debug_assert!(outputs.next().is_none(), "every head output consumed");
+    assert!(outputs.next().is_none(), "batched kernel returned more outputs than batch heads");
 }
 
 #[cfg(test)]

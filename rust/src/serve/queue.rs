@@ -62,6 +62,11 @@ impl Drop for Pending {
 struct Inner {
     items: VecDeque<Pending>,
     closed: bool,
+    /// Bumped on every successful push.  The batcher compares this
+    /// against the generation its last gather pass observed, so a
+    /// backlog it has already scanned (e.g. only foreign-bucket
+    /// requests) can never read as "new arrivals".
+    arrivals: u64,
 }
 
 /// Bounded MPSC queue: many client threads push, the one dispatcher
@@ -76,7 +81,7 @@ pub struct Queue {
 impl Queue {
     pub(crate) fn new(capacity: usize) -> Queue {
         Queue {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false, arrivals: 0 }),
             arrived: Condvar::new(),
             capacity,
         }
@@ -96,6 +101,7 @@ impl Queue {
             return Err(RejectReason::QueueFull);
         }
         inner.items.push_back(p);
+        inner.arrivals += 1;
         obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
         self.arrived.notify_one();
         Ok(())
@@ -121,39 +127,44 @@ impl Queue {
 
     /// One gather pass: move queued requests compatible with `key` into
     /// `batch` (FIFO within the bucket), shedding any expired entry
-    /// scanned, until `batch` holds `max_batch` requests.
+    /// scanned, until `batch` holds `max_batch` requests.  Returns the
+    /// arrival generation the pass observed — the `seen` token for
+    /// [`Queue::wait_for_arrival`].
     pub(crate) fn take_compatible(
         &self,
         batch: &mut Vec<Pending>,
         key: &super::batcher::BucketKey,
         max_batch: usize,
-    ) {
+    ) -> u64 {
         let mut inner = self.inner.lock().unwrap();
         super::batcher::take_compatible(&mut inner.items, batch, key, max_batch, Instant::now());
         obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
+        inner.arrivals
     }
 
-    /// Park until something arrives or `until` passes.  Returns false
-    /// when the wait is pointless (timer expired, or closed with an
-    /// empty queue) — the batcher then dispatches what it has.
-    pub(crate) fn wait_for_arrival(&self, until: Instant) -> bool {
+    /// Park until a push lands that the gather pass which observed
+    /// `seen` has not scanned, or `until` passes.  The timer is
+    /// authoritative: once `until` is reached this returns false even
+    /// if the queue is non-empty — a backlog of foreign-bucket requests
+    /// the batcher has already walked must not keep a partial batch
+    /// from dispatching (those requests get their turn as the next
+    /// leader).  Also returns false when the queue is closed with no
+    /// unseen arrivals — the batcher then dispatches what it has.
+    pub(crate) fn wait_for_arrival(&self, until: Instant, seen: u64) -> bool {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            if !inner.items.is_empty() {
+            let now = Instant::now();
+            let Some(left) = until.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+                return false;
+            };
+            if inner.arrivals != seen {
                 return true;
             }
             if inner.closed {
                 return false;
             }
-            let now = Instant::now();
-            let Some(left) = until.checked_duration_since(now).filter(|d| !d.is_zero()) else {
-                return false;
-            };
-            let (guard, timeout) = self.arrived.wait_timeout(inner, left).unwrap();
+            let (guard, _timeout) = self.arrived.wait_timeout(inner, left).unwrap();
             inner = guard;
-            if timeout.timed_out() {
-                return !inner.items.is_empty();
-            }
         }
     }
 
@@ -239,6 +250,52 @@ mod tests {
     fn wait_for_arrival_times_out_on_empty_queue() {
         let q = Queue::new(4);
         let until = Instant::now() + std::time::Duration::from_millis(5);
-        assert!(!q.wait_for_arrival(until));
+        assert!(!q.wait_for_arrival(until, 0));
+    }
+
+    /// Regression for the gather-loop livelock: a backlog the batcher
+    /// has already scanned (here a foreign-bucket request) must not
+    /// defeat the timer — `wait_for_arrival` has to block and then
+    /// report false at the deadline, not return true instantly because
+    /// the queue is non-empty.
+    #[test]
+    fn wait_for_arrival_times_out_with_only_scanned_backlog() {
+        let q = Queue::new(4);
+        let (p, _t) = pending(1);
+        q.push(p).unwrap();
+        // a gather pass for a bucket nothing matches: takes nothing,
+        // observes the current arrival generation
+        let foreign = super::super::batcher::BucketKey {
+            kind: ModelKind::Kernelized,
+            n: 2,
+            m: 2,
+            p: 2,
+            dv: 2,
+        };
+        let mut batch = Vec::new();
+        let seen = q.take_compatible(&mut batch, &foreign, 4);
+        assert!(batch.is_empty());
+        let start = Instant::now();
+        let until = start + std::time::Duration::from_millis(5);
+        assert!(!q.wait_for_arrival(until, seen), "stale backlog must not read as arrival");
+        assert!(start.elapsed() >= std::time::Duration::from_millis(5), "must block, not spin");
+        assert_eq!(q.len(), 1, "foreign request still queued for the next leader pop");
+    }
+
+    #[test]
+    fn wait_for_arrival_sees_push_after_gather() {
+        let q = Queue::new(4);
+        let foreign = super::super::batcher::BucketKey {
+            kind: ModelKind::Kernelized,
+            n: 2,
+            m: 2,
+            p: 2,
+            dv: 2,
+        };
+        let seen = q.take_compatible(&mut Vec::new(), &foreign, 4);
+        let (p, _t) = pending(1);
+        q.push(p).unwrap();
+        let until = Instant::now() + std::time::Duration::from_secs(5);
+        assert!(q.wait_for_arrival(until, seen), "push after the gather pass is a new arrival");
     }
 }

@@ -99,6 +99,43 @@ fn served_outputs_bit_identical_to_unbatched_across_schedules() {
     }
 }
 
+/// Regression for the gather-loop livelock: the leader's bucket holds
+/// fewer requests than `max_batch` while the queue holds only requests
+/// of *another* bucket.  The dispatcher must dispatch the partial batch
+/// once `max_wait` elapses (and then serve the other bucket), rather
+/// than spinning on the incompatible backlog forever.
+#[test]
+fn partial_batch_dispatches_despite_foreign_bucket_backlog() {
+    let ctx = KernelCtx::with_threads(1).with_mode(pool::Mode::Scoped);
+    let cfg = ServeConfig {
+        queue_capacity: 64,
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+    };
+    let server = Server::start(cfg, ctx);
+    // 3 requests of one bucket (can never reach max_batch = 4) and 2 of
+    // another, admitted back-to-back so they queue together
+    let requests: Vec<Request> = (0..3u64)
+        .map(|id| gen_request(21, id, ModelKind::Exact, (8, 8, 4, 4), 1))
+        .chain((3..5u64).map(|id| gen_request(21, id, ModelKind::Kernelized, (12, 10, 5, 4), 2)))
+        .collect();
+    let tickets: Vec<_> = requests
+        .iter()
+        .map(|r| server.submit(r.clone()).expect("admission"))
+        .collect();
+    for (req, ticket) in requests.iter().zip(&tickets) {
+        match ticket.wait() {
+            Outcome::Completed { outputs } => assert_bitwise_eq(
+                &outputs,
+                &reference_outputs(req),
+                &format!("req {}", req.id),
+            ),
+            other => panic!("req {} did not complete: {other:?}", req.id),
+        }
+    }
+    server.shutdown();
+}
+
 #[test]
 fn shutdown_drains_already_admitted_requests() {
     let ctx = KernelCtx::with_threads(2).with_mode(pool::Mode::Scoped);
