@@ -1,20 +1,23 @@
 //! Serving dispatch bench: batched multi-head dispatch (one pool job
 //! per batch) vs per-request dispatch (one pool job per head), across
 //! batch sizes — the number the ROADMAP's "batched multi-head dispatch"
-//! item exists to win.
+//! item exists to win — plus an end-to-end `Server` section across
+//! dispatcher shard counts under mixed-bucket load (the number the
+//! sharding item exists to win: gather-side head-of-line blocking).
 //!
 //! Run via `cargo bench --bench serve_dispatch` (custom harness).
 //! Always writes `BENCH_serve_dispatch.json` (override with `--out`)
-//! with per-(kind, batch) rows for both series plus the obs metrics
-//! snapshot.  Bitwise equality of the two series is asserted here too —
-//! a perf number for a wrong result is worse than no number.
+//! with per-(kind, batch) rows for both series, per-dispatcher-count
+//! end-to-end rows, plus the obs metrics snapshot.  Bitwise equality of
+//! the two kernel series is asserted here too — a perf number for a
+//! wrong result is worse than no number.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use skyformer::attention::exact;
 use skyformer::kernels::{self, AttnItem, KernelCtx};
 use skyformer::linalg::Matrix;
-use skyformer::serve::ModelKind;
+use skyformer::serve::{Head, ModelKind, Outcome, Priority, Request, ServeConfig, Server};
 use skyformer::util::args::Args;
 use skyformer::util::bench::bench;
 use skyformer::util::json::{self, Value};
@@ -90,6 +93,76 @@ fn main() {
                 rows.push(row);
             }
         }
+    }
+
+    // end-to-end: the full Server pipeline (admission → shard gather →
+    // single-submitter dispatch) under mixed-bucket mixed-lane load,
+    // across dispatcher shard counts.  One run = submit-and-drain of a
+    // fixed request set; the shard win is gather-side, so it shows up
+    // as wall-clock per drained set, not per kernel call.
+    let e2e_requests = args.get_usize("e2e-requests", 64).expect("--e2e-requests");
+    let gen_request = |id: u64| -> Request {
+        let mut r = Rng::new(7).split(id);
+        let kind = if r.below(2) == 0 { ModelKind::Exact } else { ModelKind::Kernelized };
+        let (sn, sp) = if r.below(2) == 0 { (n, p) } else { (n / 2, p) };
+        let heads: Vec<Head> = (0..heads)
+            .map(|_| Head {
+                q: Matrix::randn(&mut r, sn, sp, 0.5),
+                k: Matrix::randn(&mut r, sn, sp, 0.5),
+                v: Matrix::randn(&mut r, sn, sp, 1.0),
+            })
+            .collect();
+        let priority = if r.below(4) == 0 { Priority::High } else { Priority::Normal };
+        Request { id, kind, heads, deadline: None, priority }
+    };
+    let requests: Vec<Request> = (0..e2e_requests as u64).map(gen_request).collect();
+    for dispatchers in [1usize, 2, 4] {
+        let run = || {
+            let cfg = ServeConfig {
+                queue_capacity: e2e_requests.max(1),
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                dispatchers,
+                ..ServeConfig::default()
+            };
+            let server = Server::start(cfg, ctx);
+            let tickets: Vec<_> = requests
+                .iter()
+                .map(|r| server.submit(r.clone()).expect("bench admission"))
+                .collect();
+            for t in &tickets {
+                assert!(matches!(t.wait(), Outcome::Completed { .. }), "bench request lost");
+            }
+            server.shutdown();
+        };
+        // warm + measure by hand: one Server per iteration is the unit
+        run();
+        let t0 = Instant::now();
+        let iters = 3usize;
+        for _ in 0..iters {
+            run();
+        }
+        let per_drain_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        println!(
+            "e2e: dispatchers {dispatchers}: {per_drain_ms:.3} ms per {e2e_requests}-request drain \
+             ({:.0} req/s)",
+            e2e_requests as f64 / (per_drain_ms / 1e3).max(1e-9)
+        );
+        rows.push(json::obj(vec![
+            ("kind", json::s("mixed")),
+            ("series", json::s("server_e2e")),
+            ("dispatchers", json::num(dispatchers as f64)),
+            ("requests", json::num(e2e_requests as f64)),
+            ("heads", json::num(heads as f64)),
+            ("seq", json::num(n as f64)),
+            ("threads", json::num(ctx.threads as f64)),
+            ("pool", json::s(ctx.mode.name())),
+            ("mean_ms", json::num(per_drain_ms)),
+            (
+                "throughput_rps",
+                json::num(e2e_requests as f64 / (per_drain_ms / 1e3).max(1e-9)),
+            ),
+        ]));
     }
 
     let artifact = json::obj(vec![

@@ -27,8 +27,17 @@
 //! never on which batch the item landed in, the batch size, the thread
 //! count, or the pool mode.  Batched output is *bit-identical* to
 //! per-request dispatch, which is what lets the serving layer micro-batch
-//! by timing without giving up reproducibility (tests/serve.rs pins this
-//! under threads {1, 4} × both pool backends).
+//! by timing — and shard its dispatchers, and reorder by priority lane —
+//! without giving up reproducibility (tests/serve.rs pins this under
+//! threads {1, 4} × both pool backends; tests/serve_stress.rs under
+//! concurrent mixed-priority load).
+//!
+//! Call-site discipline: these entry points submit ONE pool job each, so
+//! the caller must serialize calls.  The serving subsystem guarantees
+//! this by funnelling every gathered batch — from however many dispatcher
+//! shards — through its single compute-submitter thread
+//! ([`crate::serve::dispatch`]); sharding parallelizes gathering, never
+//! pool submission.
 
 use crate::kernels::{ops::observed, pool, tile, KernelCtx};
 use crate::linalg::Matrix;

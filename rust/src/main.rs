@@ -139,6 +139,13 @@ COMMANDS
                   [--dim 32] [--dv DIM] [--heads 2]
                   [--model exact|kernelized|mixed]
                   [--max-batch 8] [--max-wait-us 200] [--queue-cap 512]
+                  [--dispatchers N]   dispatcher shards, each owning a
+                                      disjoint bucket set (default
+                                      min(2, cores); digests are identical
+                                      for every N)
+                  [--priority-mix P]  percent of requests submitted on the
+                                      High lane (0-100, default 0;
+                                      scheduling only — never bytes)
                   [--deadline-ms 0]   0 = none; >0 sheds requests whose
                                       deadline passes before compute
                   [--seed 42] [--out BENCH_serve.json]
@@ -242,7 +249,7 @@ fn kernels_cmd(args: &Args) -> Result<()> {
 /// printed so CI can diff schedules (threads × pool backends).
 fn serve_bench(args: &Args) -> Result<()> {
     use skyformer::serve::{
-        Head, ModelKind, Outcome, RejectReason, Request, ServeConfig, Server, Ticket,
+        Head, ModelKind, Outcome, Priority, RejectReason, Request, ServeConfig, Server, Ticket,
     };
     use std::time::{Duration, Instant};
 
@@ -275,6 +282,16 @@ fn serve_bench(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("max-batch", 8)?;
     let max_wait_us = args.get_u64("max-wait-us", 200)?;
     let queue_cap = args.get_usize("queue-cap", 512)?;
+    let dispatchers = args.get_usize("dispatchers", ServeConfig::default_dispatchers())?;
+    if dispatchers == 0 {
+        return Err(skyformer::Error::Config("--dispatchers must be > 0".into()));
+    }
+    let priority_mix = args.get_u64("priority-mix", 0)?;
+    if priority_mix > 100 {
+        return Err(skyformer::Error::Config(format!(
+            "bad --priority-mix `{priority_mix}` (percent, 0-100)"
+        )));
+    }
     let deadline_ms = args.get_u64("deadline-ms", 0)?;
     let seed = args.get_u64("seed", 42)?;
     let smoke = args.get_bool("smoke");
@@ -286,6 +303,16 @@ fn serve_bench(args: &Args) -> Result<()> {
         "kernelized" => ModelKind::Kernelized,
         "mixed" if id % 2 == 1 => ModelKind::Kernelized,
         _ => ModelKind::Exact,
+    };
+    // lane assignment is a pure function of the id (like the request
+    // data), so the workload — and therefore the digest — is identical
+    // however clients interleave
+    let prio_of = |id: u64| {
+        if id % 100 < priority_mix {
+            Priority::High
+        } else {
+            Priority::Normal
+        }
     };
     // request data depends on (seed, id) alone — not on which client
     // thread generates it or when — so the workload is reproducible and
@@ -312,7 +339,8 @@ fn serve_bench(args: &Args) -> Result<()> {
     eprintln!(
         "serve-bench: {requests} requests, {clients} clients, model={model}, \
          seq={seqs:?}, heads={heads}, max_batch={max_batch}, max_wait={max_wait_us}us, \
-         queue_cap={queue_cap}, deadline_ms={deadline_ms}, threads={}, pool={}{}",
+         queue_cap={queue_cap}, dispatchers={dispatchers}, priority_mix={priority_mix}%, \
+         deadline_ms={deadline_ms}, threads={}, pool={}{}",
         ctx.threads,
         ctx.mode.name(),
         if smoke { " [smoke]" } else { "" }
@@ -322,6 +350,8 @@ fn serve_bench(args: &Args) -> Result<()> {
         queue_capacity: queue_cap,
         max_batch,
         max_wait: Duration::from_micros(max_wait_us),
+        dispatchers,
+        ..ServeConfig::default()
     };
     let server = Server::start(cfg, ctx);
 
@@ -339,6 +369,7 @@ fn serve_bench(args: &Args) -> Result<()> {
                 let server = &server;
                 let gen_heads = &gen_heads;
                 let kind_of = &kind_of;
+                let prio_of = &prio_of;
                 scope.spawn(move || {
                     // open loop: submit this client's id stride first,
                     // then collect — queued depth is what exercises the
@@ -348,8 +379,13 @@ fn serve_bench(args: &Args) -> Result<()> {
                     while (id as usize) < requests {
                         let deadline = (!smoke && deadline_ms > 0)
                             .then(|| Instant::now() + Duration::from_millis(deadline_ms));
-                        let mut req =
-                            Request { id, kind: kind_of(id), heads: gen_heads(id), deadline };
+                        let mut req = Request {
+                            id,
+                            kind: kind_of(id),
+                            heads: gen_heads(id),
+                            deadline,
+                            priority: prio_of(id),
+                        };
                         let submitted = Instant::now();
                         let ticket = loop {
                             match server.submit(req) {
@@ -363,6 +399,7 @@ fn serve_bench(args: &Args) -> Result<()> {
                                         kind: kind_of(id),
                                         heads: gen_heads(id),
                                         deadline: None,
+                                        priority: prio_of(id),
                                     };
                                 }
                                 Err(_) => break None,
@@ -474,6 +511,8 @@ fn serve_bench(args: &Args) -> Result<()> {
         ("max_batch", num(max_batch as f64)),
         ("max_wait_us", num(max_wait_us as f64)),
         ("queue_capacity", num(queue_cap as f64)),
+        ("dispatchers", num(dispatchers as f64)),
+        ("priority_mix_pct", num(priority_mix as f64)),
         ("deadline_ms", num(deadline_ms as f64)),
         ("threads", num(ctx.threads as f64)),
         ("pool", s(ctx.mode.name())),

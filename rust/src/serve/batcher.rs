@@ -1,28 +1,40 @@
-//! Dynamic micro-batching: pure planning functions over the queue's
-//! `VecDeque`, plus the blocking gather loop the dispatcher runs.
+//! Dynamic micro-batching: a pure planning core over queue snapshots,
+//! thin application helpers over the queue's `VecDeque`, and the
+//! blocking gather loop each shard gatherer runs.
 //!
-//! The planning core ([`pop_leader`], [`take_compatible`]) takes the
-//! deque and an explicit `now`, touching no clocks, locks, or threads —
-//! so the batching policy is testable as plain data transformation
-//! (tests/serve.rs drives it with synthetic timestamps).  Policy:
+//! The planning core ([`plan_leader`], [`plan_gather`]) takes a slice
+//! of [`Slot`]s (one per queued request, in queue order) and an
+//! explicit `now`, touching no clocks, locks, or threads — so the
+//! batching *and* priority policy is testable as plain data
+//! transformation (`tests/proptests.rs` drives it with synthetic
+//! timestamps).  Policy:
 //!
-//! * **Leader** = oldest live request (strict FIFO at the head;
-//!   expired entries are shed, not served).
+//! * **Leader** = the oldest live request of the winning lane:
+//!   [`Priority::High`] wins unless the oldest live
+//!   [`Priority::Normal`] request has waited longer than the
+//!   starvation bound (`max_wait × starvation_factor`) *and* is older
+//!   than the oldest live High request — the starvation escape hatch.
+//!   Expired entries are shed, not served.
 //! * **Compatibility** = same [`BucketKey`]: model kind + attention
 //!   shape `(n, m, p, dv)`.  Head *count* is deliberately not part of
 //!   the key — heads flatten into the one pool job either way.
-//! * **FIFO within bucket**: the scan walks front-to-back and takes
-//!   matching entries in queue order; non-matching entries keep their
-//!   positions (no starvation reordering across buckets beyond the
-//!   leader's bucket jumping the line).
+//! * **Per-lane FIFO within bucket**: the gather takes every matching
+//!   high-lane entry in queue order, then matching normal-lane entries
+//!   in queue order, until `max_batch`.  Non-matching entries keep
+//!   their relative positions (no starvation reordering across buckets
+//!   beyond the leader's bucket jumping the line).
 //! * A batch closes at `max_batch` requests or when the leader has
 //!   waited `max_wait` since the gather began, whichever comes first.
+//!
+//! Shard **routing** ([`BucketKey::shard`]) is a pure stable hash of
+//! the bucket: every request of one bucket lands on the same shard, so
+//! per-bucket per-lane FIFO survives sharding by construction.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::queue::{Pending, Queue};
-use super::{ModelKind, Request, ServeConfig};
+use super::{ModelKind, Priority, Request, ServeConfig};
 
 /// The coalescing key: requests batch together iff these agree (the
 /// batched kernels require uniform item shapes within one job).
@@ -46,25 +58,162 @@ impl BucketKey {
         let h = req.heads.first().expect("validated request has heads");
         BucketKey { kind: req.kind, n: h.q.rows, m: h.k.rows, p: h.q.cols, dv: h.v.cols }
     }
+
+    /// Stable shard routing: FNV-1a over the bucket fields, mod
+    /// `shards`.  A pure function of the key — the same bucket can
+    /// never land on two shards, whatever the arrival order or timing
+    /// (pinned by a proptest in `tests/proptests.rs`).
+    pub fn shard(&self, shards: usize) -> usize {
+        assert!(shards > 0, "shard() needs at least one shard");
+        const FNV: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let kind = match self.kind {
+            ModelKind::Exact => 1u64,
+            ModelKind::Kernelized => 2u64,
+        };
+        let mut h = FNV;
+        for x in [kind, self.n as u64, self.m as u64, self.p as u64, self.dv as u64] {
+            h = (h ^ x).wrapping_mul(FNV_PRIME);
+        }
+        (h % shards as u64) as usize
+    }
 }
 
-/// Pop the oldest live entry, shedding every expired entry in front of
-/// it.  Pure: no clock, no lock — `now` is the caller's.
-pub(crate) fn pop_leader(items: &mut VecDeque<Pending>, now: Instant) -> Option<Pending> {
-    while let Some(p) = items.pop_front() {
-        if p.req.expired(now) {
-            p.shed_expired();
+/// One queued request as the pure planner sees it: bucket, lane, age,
+/// and deadline — nothing else influences scheduling.
+#[derive(Debug, Clone, Copy)]
+pub struct Slot {
+    pub bucket: BucketKey,
+    pub priority: Priority,
+    /// Admission timestamp (the starvation clock).
+    pub enqueued: Instant,
+    /// Absolute deadline; `None` never expires.
+    pub deadline: Option<Instant>,
+}
+
+impl Slot {
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// What [`plan_leader`] decided: the index of the leader (into the
+/// *original* slot slice) and the indices to shed as expired.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct LeaderPlan {
+    pub leader: Option<usize>,
+    pub shed: Vec<usize>,
+}
+
+/// Pick the leader over a queue snapshot.  Pure: no clock, no lock —
+/// `now` is the caller's.  Every expired slot is shed; among live
+/// slots, the oldest High leads unless the oldest Normal has waited at
+/// least `starve_after` *and* is older than that High.
+pub fn plan_leader(slots: &[Slot], now: Instant, starve_after: Duration) -> LeaderPlan {
+    let mut plan = LeaderPlan::default();
+    let (mut high, mut normal) = (None::<usize>, None::<usize>);
+    for (i, s) in slots.iter().enumerate() {
+        if s.expired(now) {
+            plan.shed.push(i);
         } else {
-            return Some(p);
+            match s.priority {
+                Priority::High => high = high.or(Some(i)),
+                Priority::Normal => normal = normal.or(Some(i)),
+            }
         }
     }
-    None
+    plan.leader = match (high, normal) {
+        (Some(h), Some(n)) => {
+            let n_slot = &slots[n];
+            let starving = now.saturating_duration_since(n_slot.enqueued) >= starve_after;
+            if starving && n_slot.enqueued < slots[h].enqueued {
+                Some(n)
+            } else {
+                Some(h)
+            }
+        }
+        (h, n) => h.or(n),
+    };
+    plan
 }
 
-/// One gather pass: walk `items` front-to-back, shedding expired
-/// entries and moving entries whose bucket matches `key` into `batch`
-/// (in queue order), until `batch` holds `max_batch`.  Entries of other
-/// buckets are left in place, in order.
+/// What [`plan_gather`] decided: indices (into the original slot
+/// slice) to move into the batch — high lane first, FIFO within each
+/// lane — and the indices to shed as expired.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct GatherPlan {
+    pub take: Vec<usize>,
+    pub shed: Vec<usize>,
+}
+
+/// Plan one gather pass over a queue snapshot: shed every expired
+/// slot, then take slots whose bucket matches `key` — all high-lane
+/// matches in queue order, then normal-lane matches in queue order —
+/// until `room` slots are taken.  Pure; slots not taken or shed keep
+/// their relative order.
+pub fn plan_gather(slots: &[Slot], key: &BucketKey, room: usize, now: Instant) -> GatherPlan {
+    let mut plan = GatherPlan::default();
+    let mut normals = Vec::new();
+    for (i, s) in slots.iter().enumerate() {
+        if s.expired(now) {
+            plan.shed.push(i);
+        } else if s.bucket == *key {
+            match s.priority {
+                Priority::High => plan.take.push(i),
+                Priority::Normal => normals.push(i),
+            }
+        }
+    }
+    plan.take.extend(normals);
+    plan.take.truncate(room);
+    plan
+}
+
+/// Snapshot the planner's view of a queue.
+fn slots_of(items: &VecDeque<Pending>) -> Vec<Slot> {
+    items
+        .iter()
+        .map(|p| Slot {
+            bucket: BucketKey::of(&p.req),
+            priority: p.req.priority,
+            enqueued: p.enqueued,
+            deadline: p.req.deadline,
+        })
+        .collect()
+}
+
+/// Remove the planned indices from `items`: `shed` entries resolve as
+/// deadline-expired, `take` entries are returned *in plan order*.
+/// Everything else keeps its relative queue position.
+fn apply_plan(items: &mut VecDeque<Pending>, take: &[usize], shed: &[usize]) -> Vec<Pending> {
+    let mut slots: Vec<Option<Pending>> = items.drain(..).map(Some).collect();
+    for &i in shed {
+        slots[i].take().expect("plan indices are disjoint").shed_expired();
+    }
+    let mut taken = Vec::with_capacity(take.len());
+    for &i in take {
+        taken.push(slots[i].take().expect("plan indices are disjoint"));
+    }
+    items.extend(slots.into_iter().flatten());
+    taken
+}
+
+/// Pop the leader per [`plan_leader`], shedding every expired entry.
+/// Pure application over the plan: no clock, no lock — `now` and
+/// `starve_after` are the caller's.
+pub(crate) fn pop_leader(
+    items: &mut VecDeque<Pending>,
+    now: Instant,
+    starve_after: Duration,
+) -> Option<Pending> {
+    let plan = plan_leader(&slots_of(items), now, starve_after);
+    let take: Vec<usize> = plan.leader.into_iter().collect();
+    apply_plan(items, &take, &plan.shed).pop()
+}
+
+/// One gather pass per [`plan_gather`]: move matching entries into
+/// `batch` (high lane first, FIFO per lane), shedding every expired
+/// entry scanned, until `batch` holds `max_batch` requests.
 pub(crate) fn take_compatible(
     items: &mut VecDeque<Pending>,
     batch: &mut Vec<Pending>,
@@ -72,24 +221,23 @@ pub(crate) fn take_compatible(
     max_batch: usize,
     now: Instant,
 ) {
-    let mut i = 0;
-    while i < items.len() && batch.len() < max_batch {
-        if items[i].req.expired(now) {
-            items.remove(i).expect("index in bounds").shed_expired();
-        } else if BucketKey::of(&items[i].req) == *key {
-            batch.push(items.remove(i).expect("index in bounds"));
-        } else {
-            i += 1;
-        }
-    }
+    let room = max_batch.saturating_sub(batch.len());
+    let plan = plan_gather(&slots_of(items), key, room, now);
+    batch.extend(apply_plan(items, &plan.take, &plan.shed));
 }
 
-/// The dispatcher's blocking gather: pop a leader (blocks while the
-/// queue is open and empty), then coalesce its bucket until `max_batch`
-/// or the `max_wait` timer.  `None` = queue closed and fully drained.
-pub(crate) fn next_batch(queue: &Queue, cfg: &ServeConfig) -> Option<Vec<Pending>> {
-    let leader = queue.pop_leader()?;
-    let _span = crate::obs::span("serve", "gather");
+/// One shard gatherer's blocking gather: pop a leader (blocks while
+/// the queue is open and empty), then coalesce its bucket until
+/// `max_batch` or the `max_wait` timer.  `None` = queue closed and
+/// fully drained.  `span_name` labels the gather span per shard
+/// (`gather#<i>`).
+pub(crate) fn next_batch(
+    queue: &Queue,
+    cfg: &ServeConfig,
+    span_name: &str,
+) -> Option<Vec<Pending>> {
+    let leader = queue.pop_leader(cfg.starvation_bound())?;
+    let _span = crate::obs::span("serve", span_name);
     let key = BucketKey::of(&leader.req);
     let until = Instant::now() + cfg.max_wait;
     let mut batch = vec![leader];
@@ -124,6 +272,7 @@ mod tests {
                 v: Matrix::zeros(4, 2),
             }],
             deadline,
+            priority: Priority::Normal,
         }
     }
 
@@ -131,6 +280,16 @@ mod tests {
         let state = Arc::new(TicketState::default());
         (Pending::new(req, Arc::clone(&state)), Ticket(state))
     }
+
+    /// A pending with a synthetic admission timestamp (the starvation
+    /// clock is the planner's input, not wall time).
+    fn pending_at(req: Request, enqueued: Instant) -> (Pending, Ticket) {
+        let (mut p, t) = pending(req);
+        p.enqueued = enqueued;
+        (p, t)
+    }
+
+    const NO_STARVE: Duration = Duration::from_secs(3600);
 
     #[test]
     fn bucket_key_separates_kind_and_shape() {
@@ -144,6 +303,21 @@ mod tests {
     }
 
     #[test]
+    fn shard_routing_is_stable_and_in_range() {
+        for n in [6usize, 8, 9, 64] {
+            for kind in [ModelKind::Exact, ModelKind::Kernelized] {
+                let key = BucketKey::of(&request(0, kind, n, None));
+                for shards in [1usize, 2, 3, 4, 7] {
+                    let s = key.shard(shards);
+                    assert!(s < shards);
+                    assert_eq!(s, key.shard(shards), "routing must be pure");
+                }
+                assert_eq!(key.shard(1), 0);
+            }
+        }
+    }
+
+    #[test]
     fn pop_leader_sheds_expired_prefix() {
         let now = Instant::now();
         let past = Some(now - Duration::from_millis(1));
@@ -152,10 +326,65 @@ mod tests {
         let (p2, _t2) = pending(request(2, ModelKind::Exact, 8, None));
         items.push_back(p1);
         items.push_back(p2);
-        let leader = pop_leader(&mut items, now).unwrap();
+        let leader = pop_leader(&mut items, now, NO_STARVE).unwrap();
         assert_eq!(leader.req.id, 2);
         assert!(matches!(t1.wait(), Outcome::Shed(ShedReason::DeadlineExpired)));
         assert!(items.is_empty());
+    }
+
+    #[test]
+    fn high_lane_leads_over_older_normal_within_bound() {
+        let now = Instant::now();
+        let mut items = VecDeque::new();
+        // Normal admitted first (older), High second — High still leads
+        let (p1, _t1) = pending_at(
+            request(1, ModelKind::Exact, 8, None),
+            now - Duration::from_millis(5),
+        );
+        let mut high = request(2, ModelKind::Exact, 8, None);
+        high.priority = Priority::High;
+        let (p2, _t2) = pending_at(high, now - Duration::from_millis(1));
+        items.push_back(p1);
+        items.push_back(p2);
+        let leader = pop_leader(&mut items, now, Duration::from_millis(100)).unwrap();
+        assert_eq!(leader.req.id, 2, "high lane leads inside the starvation bound");
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].req.id, 1, "normal stays queued, position kept");
+    }
+
+    #[test]
+    fn starved_normal_outranks_high() {
+        let now = Instant::now();
+        let mut items = VecDeque::new();
+        let (p1, _t1) = pending_at(
+            request(1, ModelKind::Exact, 8, None),
+            now - Duration::from_millis(50),
+        );
+        let mut high = request(2, ModelKind::Exact, 8, None);
+        high.priority = Priority::High;
+        let (p2, _t2) = pending_at(high, now - Duration::from_millis(1));
+        items.push_back(p1);
+        items.push_back(p2);
+        // bound = 10ms < the normal's 50ms wait, and the normal is older
+        let leader = pop_leader(&mut items, now, Duration::from_millis(10)).unwrap();
+        assert_eq!(leader.req.id, 1, "a starved older normal outranks high");
+    }
+
+    #[test]
+    fn starved_normal_younger_than_high_does_not_outrank() {
+        let now = Instant::now();
+        let mut items = VecDeque::new();
+        let mut high = request(1, ModelKind::Exact, 8, None);
+        high.priority = Priority::High;
+        let (p1, _t1) = pending_at(high, now - Duration::from_millis(80));
+        let (p2, _t2) = pending_at(
+            request(2, ModelKind::Exact, 8, None),
+            now - Duration::from_millis(50),
+        );
+        items.push_back(p1);
+        items.push_back(p2);
+        let leader = pop_leader(&mut items, now, Duration::from_millis(10)).unwrap();
+        assert_eq!(leader.req.id, 1, "an even older high still leads");
     }
 
     #[test]
@@ -180,6 +409,30 @@ mod tests {
     }
 
     #[test]
+    fn take_compatible_gathers_high_lane_first_fifo_per_lane() {
+        let now = Instant::now();
+        let mut items = VecDeque::new();
+        let mut tickets = Vec::new();
+        // arrival order 1..=6, High on ids 2 and 5
+        for id in 1..=6u64 {
+            let mut req = request(id, ModelKind::Exact, 8, None);
+            if id == 2 || id == 5 {
+                req.priority = Priority::High;
+            }
+            let (p, t) = pending(req);
+            items.push_back(p);
+            tickets.push(t);
+        }
+        let key = BucketKey::of(&request(0, ModelKind::Exact, 8, None));
+        let mut batch = Vec::new();
+        take_compatible(&mut items, &mut batch, &key, 4, now);
+        let got: Vec<u64> = batch.iter().map(|p| p.req.id).collect();
+        assert_eq!(got, vec![2, 5, 1, 3], "high lane first, FIFO within each lane");
+        let left: Vec<u64> = items.iter().map(|p| p.req.id).collect();
+        assert_eq!(left, vec![4, 6], "remainder in order");
+    }
+
+    #[test]
     fn take_compatible_respects_max_batch() {
         let now = Instant::now();
         let mut items = VecDeque::new();
@@ -199,10 +452,11 @@ mod tests {
     }
 
     /// Randomized sweep over queue contents: for any mix of buckets,
-    /// expiry states, and `max_batch`, one gather pass must (a) never
-    /// exceed `max_batch`, (b) take only live key-matching entries in
-    /// FIFO order, (c) keep everything it leaves behind in order, and
-    /// (d) drop an entry only by shedding it as expired.
+    /// lanes, expiry states, and `max_batch`, one gather pass must
+    /// (a) never exceed `max_batch`, (b) take only live key-matching
+    /// entries, high lane first and FIFO per lane, (c) keep everything
+    /// it leaves behind in order, and (d) drop an entry only by
+    /// shedding it as expired.
     #[test]
     fn prop_gather_pass_invariants() {
         for case in 0..200u64 {
@@ -213,6 +467,7 @@ mod tests {
             let mut items = VecDeque::new();
             let mut tickets = Vec::new();
             let mut expired_ids = Vec::new();
+            let mut prio = Vec::new();
             for id in 0..len as u64 {
                 let kind = if rng.below(2) == 0 { ModelKind::Exact } else { ModelKind::Kernelized };
                 let n = [6, 8, 9][rng.below(3)];
@@ -222,7 +477,12 @@ mod tests {
                 } else {
                     None
                 };
-                let (p, t) = pending(request(id, kind, n, deadline));
+                let mut req = request(id, kind, n, deadline);
+                if rng.below(3) == 0 {
+                    req.priority = Priority::High;
+                }
+                prio.push(req.priority);
+                let (p, t) = pending(req);
                 items.push_back(p);
                 tickets.push(t);
             }
@@ -234,9 +494,24 @@ mod tests {
             assert!(batch.len() <= max_batch, "case {case}: batch over max_batch");
             let batch_ids: Vec<u64> = batch.iter().map(|p| p.req.id).collect();
             let left_ids: Vec<u64> = items.iter().map(|p| p.req.id).collect();
+            // the batch is the high-lane ids ascending, then normal ids
+            // ascending — per-lane FIFO with high first
+            let split = batch
+                .iter()
+                .position(|p| p.req.priority == Priority::Normal)
+                .unwrap_or(batch.len());
             assert!(
-                batch_ids.windows(2).all(|w| w[0] < w[1]),
-                "case {case}: batch not FIFO: {batch_ids:?}"
+                batch[..split].iter().all(|p| p.req.priority == Priority::High),
+                "case {case}: normal before high: {batch_ids:?}"
+            );
+            assert!(
+                batch[split..].iter().all(|p| p.req.priority == Priority::Normal),
+                "case {case}: high after the normal tail: {batch_ids:?}"
+            );
+            assert!(
+                batch_ids[..split].windows(2).all(|w| w[0] < w[1])
+                    && batch_ids[split..].windows(2).all(|w| w[0] < w[1]),
+                "case {case}: a lane is not FIFO: {batch_ids:?}"
             );
             assert!(
                 left_ids.windows(2).all(|w| w[0] < w[1]),

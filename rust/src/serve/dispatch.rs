@@ -1,12 +1,16 @@
-//! The dispatcher: the single thread that turns gathered batches into
-//! pool jobs and resolves tickets.
+//! The dispatch pipeline: N shard gatherers feeding one compute
+//! submitter.
 //!
-//! One batch = one call into the batched kernels = one `run_rows`
-//! submission, regardless of how many requests × heads the batch holds.
-//! Keeping all kernel submission on this one thread also means the
-//! serving layer can never trip the pool's one-job-at-a-time submit
-//! lock from two sides.
+//! Each shard runs [`run_shard`] — the gather loop over that shard's
+//! own queue — and hands every formed batch across an MPSC channel to
+//! the single [`run_submitter`] thread.  One batch = one call into the
+//! batched kernels = one `run_rows` submission, regardless of how many
+//! requests × heads the batch holds.  Funnelling every submission
+//! through the one submitter thread keeps the serving layer from ever
+//! tripping the pool's one-job-at-a-time submit lock from two sides,
+//! no matter how many dispatcher shards are gathering.
 
+use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::kernels::{self, AttnItem, KernelCtx};
@@ -15,11 +19,34 @@ use crate::obs;
 use super::queue::{Pending, Queue};
 use super::{ModelKind, ServeConfig};
 
-/// Dispatcher main loop: gather → dispatch until the queue is closed
-/// and drained.  Every `Pending` that leaves the queue is resolved in
-/// here (completed or shed) before the next batch is gathered.
-pub(crate) fn run(queue: &Queue, cfg: &ServeConfig, ctx: KernelCtx) {
-    while let Some(batch) = super::batcher::next_batch(queue, cfg) {
+/// Shard gatherer main loop: gather batches from this shard's queue
+/// until it is closed and drained, handing each batch to the compute
+/// submitter.  Exits early if the submitter is gone (send fails) —
+/// the queue teardown then resolves any still-queued tickets as
+/// Dropped via the Pending safety-net.
+pub(crate) fn run_shard(
+    queue: &Queue,
+    cfg: &ServeConfig,
+    shard: usize,
+    tx: &mpsc::Sender<Vec<Pending>>,
+) {
+    let span_name = format!("gather#{shard}");
+    let batches_counter = format!("serve_shard_{shard}_batches_total");
+    while let Some(batch) = super::batcher::next_batch(queue, cfg, &span_name) {
+        obs::counter_add(&batches_counter, 1);
+        if tx.send(batch).is_err() {
+            return;
+        }
+    }
+}
+
+/// Compute-submitter main loop: the ONE thread that turns gathered
+/// batches into pool jobs and resolves tickets.  Runs until every
+/// shard gatherer has exited (all senders dropped).  Every `Pending`
+/// that arrives here is resolved (completed or shed) before the next
+/// batch is taken off the channel.
+pub(crate) fn run_submitter(rx: &mpsc::Receiver<Vec<Pending>>, ctx: KernelCtx) {
+    while let Ok(batch) = rx.recv() {
         run_batch(ctx, batch);
     }
 }
@@ -77,7 +104,9 @@ mod tests {
     use std::sync::Arc;
     use std::time::{Duration, Instant};
 
-    use super::super::{Head, ModelKind, Outcome, Request, ShedReason, Ticket, TicketState};
+    use super::super::{
+        Head, ModelKind, Outcome, Priority, Request, ShedReason, Ticket, TicketState,
+    };
     use super::*;
     use crate::linalg::Matrix;
     use crate::util::rng::Rng;
@@ -91,7 +120,7 @@ mod tests {
                 v: Matrix::randn(&mut rng, 5, 3, 1.0),
             })
             .collect();
-        Request { id, kind, heads, deadline }
+        Request { id, kind, heads, deadline, priority: Priority::Normal }
     }
 
     fn pending(req: Request) -> (Pending, Ticket) {
@@ -150,5 +179,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The shard→submitter handoff end to end at module level: one
+    /// shard queue, a real gatherer + submitter pair, tickets resolve.
+    #[test]
+    fn shard_and_submitter_pipeline_resolves_tickets() {
+        let ctx = KernelCtx::with_threads(1);
+        let cfg = ServeConfig { dispatchers: 1, ..ServeConfig::default() };
+        let total = Arc::new(std::sync::atomic::AtomicIsize::new(0));
+        let queue = Arc::new(Queue::for_shard(16, 93, total));
+        let (tx, rx) = mpsc::channel::<Vec<Pending>>();
+
+        let (p1, t1) = pending(request(1, ModelKind::Exact, 1, None));
+        let (p2, t2) = pending(request(2, ModelKind::Kernelized, 1, None));
+        queue.push(p1).unwrap();
+        queue.push(p2).unwrap();
+        queue.close();
+
+        std::thread::scope(|s| {
+            let q = Arc::clone(&queue);
+            let gather = s.spawn(move || run_shard(&q, &cfg, 93, &tx));
+            // tx moved into the gatherer and dropped when it exits, so
+            // the submitter's recv() errs out once the queue drains
+            let submit = s.spawn(move || run_submitter(&rx, ctx));
+            gather.join().unwrap();
+            submit.join().unwrap();
+        });
+        assert!(matches!(t1.wait(), Outcome::Completed { .. }));
+        assert!(matches!(t2.wait(), Outcome::Completed { .. }));
     }
 }

@@ -1,49 +1,67 @@
-//! Inference serving subsystem: bounded admission queue, dynamic
-//! micro-batching, and deadline-aware batched dispatch (SERVING.md).
+//! Inference serving subsystem: sharded admission queues with priority
+//! lanes, dynamic micro-batching, and deadline-aware batched dispatch
+//! through a single compute submitter (SERVING.md).
 //!
-//! The request path is three stages, each observable:
+//! The request path is four stages, each observable:
 //!
-//! 1. **Admission** ([`queue`]) — a bounded FIFO with backpressure.
-//!    [`Server::submit`] never blocks: a full queue rejects with
-//!    [`RejectReason::QueueFull`], a closed server with
+//! 1. **Admission + routing** ([`queue`]) — [`Server::submit`] validates
+//!    the request, routes it by a stable hash of its
+//!    [`batcher::BucketKey`] to one of `dispatchers` **shards** (each a
+//!    bounded FIFO with backpressure), and never blocks: a full shard
+//!    rejects with [`RejectReason::QueueFull`], a closed server with
 //!    [`RejectReason::ShuttingDown`], a bad request with
 //!    [`RejectReason::Malformed`].  Accepted requests return a
-//!    [`Ticket`] the client blocks on.
-//! 2. **Batching** ([`batcher`]) — the dispatcher pops the oldest live
-//!    request (the *leader*) and coalesces compatible requests — same
-//!    [`batcher::BucketKey`]: model kind + attention shape — behind it,
-//!    FIFO within the bucket, until `max_batch` requests or the
-//!    `max_wait` timer, whichever first.  Requests whose deadline passed
-//!    are shed ([`ShedReason::DeadlineExpired`]) wherever they are met,
-//!    before any compute is spent on them.
-//! 3. **Dispatch** ([`dispatch`]) — every head of every request in the
+//!    [`Ticket`] the client blocks on.  Routing is a pure function of
+//!    the bucket, so one bucket's backlog can never head-of-line-block
+//!    another bucket that hashed to a different shard.
+//! 2. **Batching** ([`batcher`]) — each shard's gatherer picks a leader
+//!    by **priority lane** ([`Priority::High`] leads;
+//!    [`Priority::Normal`] outranks it only past the starvation bound
+//!    `max_wait × starvation_factor`) and coalesces compatible requests
+//!    — same [`batcher::BucketKey`]: model kind + attention shape —
+//!    behind it, high lane first, FIFO within each lane, until
+//!    `max_batch` requests or the `max_wait` timer, whichever first.
+//!    Requests whose deadline passed are shed
+//!    ([`ShedReason::DeadlineExpired`]) wherever they are met, before
+//!    any compute is spent on them.
+//! 3. **Submission** ([`dispatch`]) — shards funnel gathered batches
+//!    through one MPSC channel into the single **compute submitter**
+//!    thread; it alone turns batches into pool jobs, so the kernel
+//!    pool's one-job-at-a-time invariant holds by construction no
+//!    matter how many shards gather concurrently.
+//! 4. **Dispatch** ([`dispatch`]) — every head of every request in the
 //!    batch becomes one [`crate::kernels::AttnItem`] and the whole batch
 //!    runs as **one** pool job via
 //!    [`crate::kernels::batched_softmax_attention`] /
 //!    [`crate::kernels::batched_kernelized_attention`].  Because each
 //!    output row's arithmetic depends only on its own head, results are
-//!    bit-identical to per-request dispatch no matter how the timer
-//!    happened to slice batches — throughput from batching, bytes as if
-//!    unbatched.
+//!    bit-identical to per-request dispatch no matter how the timer,
+//!    the shard count, or the priority lanes happened to slice batches
+//!    — throughput from batching, bytes as if unbatched.
 //!
-//! [`Server::shutdown`] closes admission and *drains*: everything
-//! already admitted still completes (or sheds on its deadline) before
-//! the dispatcher exits.  Every accepted ticket resolves — completed,
-//! shed, or (only if the server is torn down abnormally)
-//! [`ShedReason::Dropped`]; `skyformer serve-bench` asserts the
-//! zero-lost-requests invariant end to end.
+//! [`Server::close`] closes admission without blocking;
+//! [`Server::shutdown`] closes and *drains*: everything already admitted
+//! still completes (or sheds on its deadline) before the shard
+//! gatherers and the submitter exit.  Every accepted ticket resolves —
+//! completed, shed, or (only if the server is torn down abnormally)
+//! [`ShedReason::Dropped`]; `skyformer serve-bench` and
+//! `rust/tests/serve_stress.rs` assert the zero-lost-requests invariant
+//! end to end.
 //!
-//! Metrics (OBSERVABILITY.md): `serve_queue_depth`, `serve_batch_size`,
-//! `serve_request_latency_seconds`, `serve_rejects_total`,
-//! `serve_deadline_sheds_total`, `serve_completed_total`,
+//! Metrics (OBSERVABILITY.md): `serve_queue_depth`,
+//! `serve_shard_<i>_queue_depth`, `serve_shard_<i>_batches_total`,
+//! `serve_batch_size`, `serve_request_latency_seconds`,
+//! `serve_rejects_total`, `serve_deadline_sheds_total`,
+//! `serve_priority_sheds_total`, `serve_completed_total`,
 //! `serve_batches_total`; spans under the `serve` category for the
-//! gather and dispatch stages.
+//! per-shard gather (`gather#<i>`) and dispatch stages.
 
 pub mod batcher;
 pub mod dispatch;
 pub mod queue;
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::AtomicIsize;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::kernels::KernelCtx;
@@ -77,6 +95,39 @@ impl ModelKind {
     }
 }
 
+/// Admission-queue priority lane.  Priority changes *scheduling only* —
+/// which request leads batch formation — never output bytes; the
+/// determinism contract is lane-blind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    /// Leads batch formation ahead of [`Priority::Normal`] wherever a
+    /// shard forms a batch.
+    High,
+    /// The default lane.  A Normal leader that has waited longer than
+    /// the starvation bound (`max_wait × starvation_factor`) and is
+    /// older than the oldest queued High request outranks the high
+    /// lane, so Normal traffic is delayed but never starved.
+    #[default]
+    Normal,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+        }
+    }
+}
+
 /// One attention head's inputs: `q (n x p)`, `k (m x p)`, `v (m x dv)`.
 #[derive(Debug, Clone)]
 pub struct Head {
@@ -96,8 +147,10 @@ pub struct Request {
     pub heads: Vec<Head>,
     /// Absolute deadline; `None` means never shed.  A request past its
     /// deadline is shed wherever the pipeline next touches it — at
-    /// leader pop, batch gather, or the final pre-compute check.
+    /// leader selection, batch gather, or the final pre-compute check.
     pub deadline: Option<Instant>,
+    /// Admission-queue lane (scheduling only; see [`Priority`]).
+    pub priority: Priority,
 }
 
 impl Request {
@@ -121,9 +174,10 @@ pub enum ShedReason {
 /// the queue; no ticket exists).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RejectReason {
-    /// The bounded queue is at capacity — backpressure; retry later.
+    /// The request's shard queue is at capacity — backpressure; retry
+    /// later.
     QueueFull,
-    /// [`Server::shutdown`] has closed admission.
+    /// [`Server::close`] / [`Server::shutdown`] has closed admission.
     ShuttingDown,
     /// The request fails shape validation (the message says how).
     Malformed(&'static str),
@@ -194,8 +248,10 @@ impl Ticket {
 /// Serving knobs (SERVING.md walks through the trade-offs).
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    /// Admission bound: requests beyond this are rejected
-    /// ([`RejectReason::QueueFull`]), never silently queued.
+    /// Admission bound across the whole server: the bound is split
+    /// evenly over the shards (`ceil(queue_capacity / dispatchers)`
+    /// each); a full shard rejects with [`RejectReason::QueueFull`],
+    /// never silently queues.
     pub queue_capacity: usize,
     /// Largest number of *requests* coalesced into one batch (heads
     /// within a request don't count against this; they always travel
@@ -204,6 +260,28 @@ pub struct ServeConfig {
     /// How long a batch leader waits for company before dispatching
     /// under-full.  Bounds the batching latency tax on a quiet server.
     pub max_wait: Duration,
+    /// Dispatcher shards.  Each shard owns a disjoint set of buckets
+    /// (stable hash of [`batcher::BucketKey`]) and gathers batches
+    /// independently; all shards submit compute through one funnel.
+    /// Default [`ServeConfig::default_dispatchers`] = `min(2, cores)`.
+    pub dispatchers: usize,
+    /// Starvation bound multiplier: a [`Priority::Normal`] leader older
+    /// than `max_wait × starvation_factor` (and older than the oldest
+    /// queued High request) outranks the high lane.
+    pub starvation_factor: u32,
+}
+
+impl ServeConfig {
+    /// The default shard count: `min(2, pool cores)` — sharding buys
+    /// nothing on a single-core host.
+    pub fn default_dispatchers() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(2)
+    }
+
+    /// The age past which a Normal leader outranks the high lane.
+    pub fn starvation_bound(&self) -> Duration {
+        self.max_wait * self.starvation_factor
+    }
 }
 
 impl Default for ServeConfig {
@@ -212,61 +290,110 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             max_batch: 8,
             max_wait: Duration::from_micros(200),
+            dispatchers: Self::default_dispatchers(),
+            starvation_factor: 8,
         }
     }
 }
 
-/// A running serving instance: one admission queue + one dispatcher
-/// thread.  The dispatcher is the only thread that submits pool jobs,
-/// so each batch is exactly one `run_rows` submission and the pool's
-/// one-job-at-a-time invariant holds by construction.
+/// A running serving instance: `dispatchers` shard queues, one gatherer
+/// thread per shard, and **one** compute-submitter thread.  The
+/// submitter is the only thread that submits pool jobs, so each batch
+/// is exactly one `run_rows` submission and the pool's
+/// one-job-at-a-time invariant holds however many shards gather
+/// concurrently.
 pub struct Server {
-    queue: Arc<queue::Queue>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    shards: Vec<Arc<queue::Queue>>,
+    gatherers: Vec<std::thread::JoinHandle<()>>,
+    submitter: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn the dispatcher and open admission.
+    /// Spawn the shard gatherers and the compute submitter, and open
+    /// admission.
     pub fn start(cfg: ServeConfig, ctx: KernelCtx) -> Server {
         assert!(cfg.queue_capacity > 0, "queue_capacity must be > 0");
         assert!(cfg.max_batch > 0, "max_batch must be > 0");
-        let queue = Arc::new(queue::Queue::new(cfg.queue_capacity));
-        let q = Arc::clone(&queue);
-        let dispatcher = std::thread::Builder::new()
-            .name("serve-dispatch".into())
-            .spawn(move || dispatch::run(&q, &cfg, ctx))
-            .expect("spawn serve dispatcher");
-        Server { queue, dispatcher: Some(dispatcher) }
+        assert!(cfg.dispatchers > 0, "dispatchers must be > 0");
+        let per_shard_cap = cfg.queue_capacity.div_ceil(cfg.dispatchers);
+        let total_depth = Arc::new(AtomicIsize::new(0));
+        let shards: Vec<Arc<queue::Queue>> = (0..cfg.dispatchers)
+            .map(|s| Arc::new(queue::Queue::for_shard(per_shard_cap, s, Arc::clone(&total_depth))))
+            .collect();
+        // shards funnel gathered batches through this channel into the
+        // single submitter — pool-job submission stays single-entry
+        let (tx, rx) = mpsc::channel::<Vec<queue::Pending>>();
+        let gatherers: Vec<_> = shards
+            .iter()
+            .enumerate()
+            .map(|(s, q)| {
+                let q = Arc::clone(q);
+                let tx = tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-shard-{s}"))
+                    .spawn(move || dispatch::run_shard(&q, &cfg, s, &tx))
+                    .expect("spawn serve shard gatherer")
+            })
+            .collect();
+        // the submitter exits when every gatherer has dropped its sender
+        drop(tx);
+        let submitter = std::thread::Builder::new()
+            .name("serve-submit".into())
+            .spawn(move || dispatch::run_submitter(&rx, ctx))
+            .expect("spawn serve submitter");
+        Server { shards, gatherers, submitter: Some(submitter) }
     }
 
     /// Admit a request (non-blocking).  `Ok` hands back the ticket to
     /// wait on; `Err` means the request never entered the system.
+    /// Routing is a stable hash of the request's bucket, so every
+    /// request of one bucket lands on the same shard (FIFO per lane is
+    /// preserved per bucket).
     pub fn submit(&self, req: Request) -> Result<Ticket, RejectReason> {
         if let Err(why) = validate(&req) {
             crate::obs::counter_add("serve_rejects_total", 1);
             return Err(RejectReason::Malformed(why));
         }
+        let shard = batcher::BucketKey::of(&req).shard(self.shards.len());
         let state = Arc::new(TicketState::default());
         let pending = queue::Pending::new(req, Arc::clone(&state));
-        self.queue.push(pending)?;
+        self.shards[shard].push(pending)?;
         Ok(Ticket(state))
     }
 
+    /// Close admission without blocking: new submits get
+    /// [`RejectReason::ShuttingDown`]; everything already admitted
+    /// still drains.  Idempotent, callable from any thread — the
+    /// stress suite races it against live submitters.  Follow with
+    /// [`Server::shutdown`] (or drop) to block until the drain ends.
+    pub fn close(&self) {
+        for q in &self.shards {
+            q.close();
+        }
+    }
+
     /// Close admission and drain: blocks until every already-admitted
-    /// request has resolved and the dispatcher has exited.
+    /// request has resolved and the shard gatherers + submitter have
+    /// exited.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        self.queue.close();
-        if let Some(handle) = self.dispatcher.take() {
-            if handle.join().is_err() {
-                // the dispatcher panicked; queued tickets resolve as
-                // Dropped via Pending's drop safety-net when the queue
-                // is torn down — nobody deadlocks on wait()
-                eprintln!("serve: dispatcher thread panicked during drain");
-            }
+        self.close();
+        let mut panicked = false;
+        for handle in self.gatherers.drain(..) {
+            panicked |= handle.join().is_err();
+        }
+        if let Some(handle) = self.submitter.take() {
+            panicked |= handle.join().is_err();
+        }
+        if panicked {
+            // a panicking gatherer/submitter drops its in-flight
+            // Pendings, which resolve as Dropped via the drop
+            // safety-net; leftovers still queued resolve when the shard
+            // queues drop with the Server — nobody deadlocks on wait()
+            eprintln!("serve: a serving thread panicked during drain");
         }
     }
 }
@@ -324,12 +451,39 @@ mod tests {
     }
 
     #[test]
+    fn priority_parse_roundtrip_and_default() {
+        for p in [Priority::High, Priority::Normal] {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn default_dispatchers_is_at_most_two_and_positive() {
+        let d = ServeConfig::default_dispatchers();
+        assert!((1..=2).contains(&d), "min(2, cores) out of range: {d}");
+        assert_eq!(ServeConfig::default().dispatchers, d);
+    }
+
+    #[test]
+    fn starvation_bound_scales_max_wait() {
+        let cfg = ServeConfig {
+            max_wait: Duration::from_millis(3),
+            starvation_factor: 5,
+            ..ServeConfig::default()
+        };
+        assert_eq!(cfg.starvation_bound(), Duration::from_millis(15));
+    }
+
+    #[test]
     fn validate_rejects_bad_shapes() {
         let ok = Request {
             id: 0,
             kind: ModelKind::Exact,
             heads: vec![head(4, 6, 3, 2), head(4, 6, 3, 2)],
             deadline: None,
+            priority: Priority::Normal,
         };
         assert!(validate(&ok).is_ok());
         assert!(validate(&Request { heads: vec![], ..ok.clone() }).is_err());
@@ -363,6 +517,7 @@ mod tests {
             kind: ModelKind::Exact,
             heads: vec![head(2, 2, 2, 2)],
             deadline: Some(now),
+            priority: Priority::Normal,
         };
         assert!(req.expired(now));
         assert!(!Request { deadline: None, ..req.clone() }.expired(now));

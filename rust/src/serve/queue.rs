@@ -1,6 +1,6 @@
-//! Bounded admission queue with backpressure — the only mutable state
-//! the serving subsystem shares between client threads and the
-//! dispatcher.
+//! Bounded admission queue with backpressure — one instance per
+//! dispatcher shard, the only mutable state the serving subsystem
+//! shares between client threads and that shard's gatherer.
 //!
 //! Invariants:
 //!
@@ -12,18 +12,25 @@
 //!   explicitly; a drop safety-net resolves anything else as
 //!   [`ShedReason::Dropped`], so a client blocked on
 //!   [`super::Ticket::wait`] can never deadlock on a torn-down server.
-//! * `serve_queue_depth` tracks the live length on every transition.
+//! * Depth gauges never go stale: `serve_shard_<i>_queue_depth` (this
+//!   shard) and `serve_queue_depth` (the sum over shards, via a shared
+//!   counter) are republished on every push/take/shed, on
+//!   [`Queue::close`], and when the queue itself is torn down with
+//!   entries still inside — a drained shut-down server always reads
+//!   depth 0.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicIsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::obs;
 
-use super::{Outcome, RejectReason, Request, ShedReason, TicketState};
+use super::{Outcome, Priority, RejectReason, Request, ShedReason, TicketState};
 
 /// An admitted request travelling through the pipeline: the request,
-/// its ticket, and its admission timestamp (the latency clock).
+/// its ticket, and its admission timestamp (the latency clock and the
+/// starvation clock).
 #[derive(Debug)]
 pub(crate) struct Pending {
     pub req: Request,
@@ -43,9 +50,15 @@ impl Pending {
         self.ticket.resolve(Outcome::Completed { outputs });
     }
 
-    /// Resolve as shed (deadline passed before compute).
+    /// Resolve as shed (deadline passed before compute).  Sheds that
+    /// hit the high lane are counted separately — with priority lanes
+    /// doing their job, `serve_priority_sheds_total` should stay near
+    /// zero while Normal absorbs the deadline pressure.
     pub(crate) fn shed_expired(self) {
         obs::counter_add("serve_deadline_sheds_total", 1);
+        if self.req.priority == Priority::High {
+            obs::counter_add("serve_priority_sheds_total", 1);
+        }
         self.ticket.resolve(Outcome::Shed(ShedReason::DeadlineExpired));
     }
 }
@@ -67,24 +80,63 @@ struct Inner {
     /// backlog it has already scanned (e.g. only foreign-bucket
     /// requests) can never read as "new arrivals".
     arrivals: u64,
+    /// The length last folded into the shared total-depth counter —
+    /// the delta source for `serve_queue_depth`.
+    published: usize,
 }
 
-/// Bounded MPSC queue: many client threads push, the one dispatcher
-/// thread pops/scans under the same lock via the [`super::batcher`]
-/// planning functions.
+/// Bounded MPSC queue: many client threads push, this shard's one
+/// gatherer thread pops/scans under the same lock via the
+/// [`super::batcher`] planning functions.
 pub struct Queue {
     inner: Mutex<Inner>,
     arrived: Condvar,
     capacity: usize,
+    /// Gauge name `serve_shard_<i>_queue_depth`, precomputed.
+    depth_gauge: String,
+    /// Live depth summed across every shard of the same server —
+    /// backs the aggregate `serve_queue_depth` gauge.
+    total: Arc<AtomicIsize>,
 }
 
 impl Queue {
-    pub(crate) fn new(capacity: usize) -> Queue {
+    /// A shard's queue: `shard` names the per-shard depth gauge,
+    /// `total` is the server-wide depth counter shared by every shard.
+    pub(crate) fn for_shard(capacity: usize, shard: usize, total: Arc<AtomicIsize>) -> Queue {
         Queue {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false, arrivals: 0 }),
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+                arrivals: 0,
+                published: 0,
+            }),
             arrived: Condvar::new(),
             capacity,
+            depth_gauge: format!("serve_shard_{shard}_queue_depth"),
+            total,
         }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn new(capacity: usize) -> Queue {
+        Queue::for_shard(capacity, 0, Arc::new(AtomicIsize::new(0)))
+    }
+
+    /// Republish both depth gauges from the current queue length.
+    /// Called on every state transition *and* on close/teardown, so a
+    /// drained or torn-down queue can never leave a stale nonzero
+    /// depth behind.
+    fn publish_depth(&self, inner: &mut Inner) {
+        let len = inner.items.len();
+        let delta = len as isize - inner.published as isize;
+        let total = if delta != 0 {
+            self.total.fetch_add(delta, Ordering::Relaxed) + delta
+        } else {
+            self.total.load(Ordering::Relaxed)
+        };
+        inner.published = len;
+        obs::gauge_set("serve_queue_depth", total.max(0) as f64);
+        obs::gauge_set(&self.depth_gauge, len as f64);
     }
 
     /// Admit or reject, never block.  On rejection the pending's ticket
@@ -102,19 +154,22 @@ impl Queue {
         }
         inner.items.push_back(p);
         inner.arrivals += 1;
-        obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
+        self.publish_depth(&mut inner);
         self.arrived.notify_one();
         Ok(())
     }
 
     /// Block until a live (non-expired) leader is available and pop it;
-    /// `None` once the queue is closed *and* drained — the dispatcher's
-    /// exit condition.  Expired requests are shed on the way.
-    pub(crate) fn pop_leader(&self) -> Option<Pending> {
+    /// `None` once the queue is closed *and* drained — the gatherer's
+    /// exit condition.  Leader choice is lane-aware (`High` leads,
+    /// `starve_after` is the Normal-lane escape hatch); expired
+    /// requests are shed on the way.
+    pub(crate) fn pop_leader(&self, starve_after: Duration) -> Option<Pending> {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            let leader = super::batcher::pop_leader(&mut inner.items, Instant::now());
-            obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
+            let leader =
+                super::batcher::pop_leader(&mut inner.items, Instant::now(), starve_after);
+            self.publish_depth(&mut inner);
             if let Some(p) = leader {
                 return Some(p);
             }
@@ -126,10 +181,10 @@ impl Queue {
     }
 
     /// One gather pass: move queued requests compatible with `key` into
-    /// `batch` (FIFO within the bucket), shedding any expired entry
-    /// scanned, until `batch` holds `max_batch` requests.  Returns the
-    /// arrival generation the pass observed — the `seen` token for
-    /// [`Queue::wait_for_arrival`].
+    /// `batch` (high lane first, FIFO per lane), shedding any expired
+    /// entry scanned, until `batch` holds `max_batch` requests.
+    /// Returns the arrival generation the pass observed — the `seen`
+    /// token for [`Queue::wait_for_arrival`].
     pub(crate) fn take_compatible(
         &self,
         batch: &mut Vec<Pending>,
@@ -138,7 +193,7 @@ impl Queue {
     ) -> u64 {
         let mut inner = self.inner.lock().unwrap();
         super::batcher::take_compatible(&mut inner.items, batch, key, max_batch, Instant::now());
-        obs::gauge_set("serve_queue_depth", inner.items.len() as f64);
+        self.publish_depth(&mut inner);
         inner.arrivals
     }
 
@@ -168,11 +223,12 @@ impl Queue {
         }
     }
 
-    /// Close admission (push rejects from now on) and wake the
-    /// dispatcher so it drains and exits.
+    /// Close admission (push rejects from now on), republish the depth
+    /// gauges, and wake the gatherer so it drains and exits.
     pub(crate) fn close(&self) {
         let mut inner = self.inner.lock().unwrap();
         inner.closed = true;
+        self.publish_depth(&mut inner);
         self.arrived.notify_all();
     }
 
@@ -182,11 +238,35 @@ impl Queue {
     }
 }
 
+impl Drop for Queue {
+    fn drop(&mut self) {
+        // abnormal-teardown path: a queue dropped with entries still
+        // inside (dispatcher panic, server torn down mid-backlog) must
+        // resolve those tickets (Pending::drop → Shed(Dropped)) and
+        // take its contribution out of the depth gauges — otherwise a
+        // dead server reports a stale nonzero serve_queue_depth forever
+        let published = {
+            let inner = match self.inner.get_mut() {
+                Ok(inner) => inner,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            inner.items.clear();
+            std::mem::replace(&mut inner.published, 0)
+        };
+        let delta = -(published as isize);
+        let total = self.total.fetch_add(delta, Ordering::Relaxed) + delta;
+        obs::gauge_set("serve_queue_depth", total.max(0) as f64);
+        obs::gauge_set(&self.depth_gauge, 0.0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{Head, ModelKind, ShedReason, Ticket};
     use super::*;
     use crate::linalg::Matrix;
+
+    const NO_STARVE: Duration = Duration::from_secs(3600);
 
     fn request(id: u64) -> Request {
         Request {
@@ -198,12 +278,20 @@ mod tests {
                 v: Matrix::zeros(2, 2),
             }],
             deadline: None,
+            priority: Priority::Normal,
         }
     }
 
     fn pending(id: u64) -> (Pending, Ticket) {
         let state = Arc::new(TicketState::default());
         (Pending::new(request(id), Arc::clone(&state)), Ticket(state))
+    }
+
+    fn gauge(name: &str) -> Option<f64> {
+        match obs::snapshot().metrics.get(name) {
+            Some(obs::Metric::Gauge(v)) => Some(*v),
+            _ => None,
+        }
     }
 
     #[test]
@@ -232,8 +320,8 @@ mod tests {
         let (p, _t) = pending(7);
         q.push(p).unwrap();
         q.close();
-        assert_eq!(q.pop_leader().unwrap().req.id, 7);
-        assert!(q.pop_leader().is_none());
+        assert_eq!(q.pop_leader(NO_STARVE).unwrap().req.id, 7);
+        assert!(q.pop_leader(NO_STARVE).is_none());
     }
 
     #[test]
@@ -246,10 +334,56 @@ mod tests {
         }
     }
 
+    /// Regression for the depth-gauge staleness bug: close() and the
+    /// teardown path must republish, so a shut-down (or abnormally
+    /// torn-down) queue reads depth 0, not whatever the last push
+    /// published.  Shard 91 is used by no other test, so the per-shard
+    /// gauge is race-free even with the global registry shared across
+    /// the parallel test harness.
+    #[test]
+    fn depth_gauge_republished_on_close_and_teardown() {
+        let total = Arc::new(AtomicIsize::new(0));
+        let q = Queue::for_shard(8, 91, Arc::clone(&total));
+        let (p1, t1) = pending(1);
+        let (p2, t2) = pending(2);
+        q.push(p1).unwrap();
+        q.push(p2).unwrap();
+        assert_eq!(gauge("serve_shard_91_queue_depth"), Some(2.0));
+        assert_eq!(total.load(Ordering::Relaxed), 2);
+        q.close();
+        // close republishes (still 2 queued — nothing drained them)
+        assert_eq!(gauge("serve_shard_91_queue_depth"), Some(2.0));
+        // abnormal teardown: queue dropped with a live backlog — the
+        // gauge must go to zero, the shared counter must give the two
+        // back, and both tickets must resolve (as Dropped)
+        drop(q);
+        assert_eq!(gauge("serve_shard_91_queue_depth"), Some(0.0));
+        assert_eq!(total.load(Ordering::Relaxed), 0);
+        assert!(matches!(t1.wait(), Outcome::Shed(ShedReason::Dropped)));
+        assert!(matches!(t2.wait(), Outcome::Shed(ShedReason::Dropped)));
+    }
+
+    /// Graceful-drain counterpart: a queue drained through pop_leader
+    /// publishes zero before it is ever dropped.
+    #[test]
+    fn depth_gauge_zero_after_drain() {
+        let total = Arc::new(AtomicIsize::new(0));
+        let q = Queue::for_shard(8, 92, Arc::clone(&total));
+        let (p, _t) = pending(1);
+        q.push(p).unwrap();
+        assert_eq!(gauge("serve_shard_92_queue_depth"), Some(1.0));
+        let _leader = q.pop_leader(NO_STARVE).unwrap();
+        assert_eq!(gauge("serve_shard_92_queue_depth"), Some(0.0));
+        assert_eq!(total.load(Ordering::Relaxed), 0);
+    }
+
     #[test]
     fn wait_for_arrival_times_out_on_empty_queue() {
         let q = Queue::new(4);
-        let until = Instant::now() + std::time::Duration::from_millis(5);
+        // generous margin: correctness here is "returns false with no
+        // unseen arrival", not a tight timing bound — loaded CI hosts
+        // may oversleep the condvar arbitrarily
+        let until = Instant::now() + Duration::from_millis(30);
         assert!(!q.wait_for_arrival(until, 0));
     }
 
@@ -257,7 +391,9 @@ mod tests {
     /// has already scanned (here a foreign-bucket request) must not
     /// defeat the timer — `wait_for_arrival` has to block and then
     /// report false at the deadline, not return true instantly because
-    /// the queue is non-empty.
+    /// the queue is non-empty.  Asserted on generation semantics (the
+    /// arrival counter is unchanged, the backlog is still queued), not
+    /// on wall-clock margins.
     #[test]
     fn wait_for_arrival_times_out_with_only_scanned_backlog() {
         let q = Queue::new(4);
@@ -276,10 +412,19 @@ mod tests {
         let seen = q.take_compatible(&mut batch, &foreign, 4);
         assert!(batch.is_empty());
         let start = Instant::now();
-        let until = start + std::time::Duration::from_millis(5);
+        let until = start + Duration::from_millis(30);
         assert!(!q.wait_for_arrival(until, seen), "stale backlog must not read as arrival");
-        assert!(start.elapsed() >= std::time::Duration::from_millis(5), "must block, not spin");
+        // the timer is authoritative: false is only returned at/after
+        // `until`, so an instant return (the old hot-spin) shows up as
+        // elapsed < deadline.  The bound is on the monotonic clock we
+        // set the deadline with — not load-sensitive.
+        assert!(start.elapsed() >= Duration::from_millis(30), "must block, not spin");
         assert_eq!(q.len(), 1, "foreign request still queued for the next leader pop");
+        // generation semantics: nothing arrived while we waited — a
+        // re-scan observes the same token, so the gatherer would
+        // dispatch its partial batch rather than loop again
+        let again = q.take_compatible(&mut batch, &foreign, 4);
+        assert_eq!(again, seen, "no unseen arrival may exist after a timed-out wait");
     }
 
     #[test]
@@ -295,7 +440,10 @@ mod tests {
         let seen = q.take_compatible(&mut Vec::new(), &foreign, 4);
         let (p, _t) = pending(1);
         q.push(p).unwrap();
-        let until = Instant::now() + std::time::Duration::from_secs(5);
+        // the deadline is irrelevant to the semantics under test (an
+        // unseen arrival returns true immediately); it is generous so a
+        // loaded host cannot turn a pass into a timeout
+        let until = Instant::now() + Duration::from_secs(30);
         assert!(q.wait_for_arrival(until, seen), "push after the gather pass is a new arrival");
     }
 }

@@ -436,6 +436,186 @@ fn prop_prometheus_names_always_escape_cleanly() {
     });
 }
 
+// ----------------------------------------------------------------- serve
+
+use skyformer::serve::batcher::{plan_gather, plan_leader, BucketKey, Slot};
+use skyformer::serve::{ModelKind, Priority};
+use std::time::{Duration, Instant};
+
+fn random_bucket(rng: &mut Rng) -> BucketKey {
+    BucketKey {
+        kind: if rng.below(2) == 0 { ModelKind::Exact } else { ModelKind::Kernelized },
+        n: [6, 8, 12, 64][rng.below(4)],
+        m: [8, 10][rng.below(2)],
+        p: [4, 5][rng.below(2)],
+        dv: [2, 4][rng.below(2)],
+    }
+}
+
+/// A random queue snapshot honouring the queue's structural invariant:
+/// slice order == arrival order == ascending `enqueued`.  Timestamps
+/// are synthetic (all relative to one base), so the starvation policy
+/// is exercised as pure data — no sleeps, no real clock.
+fn random_slots(rng: &mut Rng, base: Instant, now: Instant) -> Vec<Slot> {
+    let len = rng.below(20);
+    let mut at = base;
+    (0..len)
+        .map(|_| {
+            at += Duration::from_millis(1 + rng.below(200) as u64);
+            let deadline = match rng.below(4) {
+                // expired at `now` / still live / never expires
+                0 => Some(at + Duration::from_millis(1)),
+                1 => Some(now + Duration::from_secs(5)),
+                _ => None,
+            };
+            Slot {
+                bucket: random_bucket(rng),
+                priority: if rng.below(3) == 0 { Priority::High } else { Priority::Normal },
+                enqueued: at,
+                deadline,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_shard_routing_is_pure_and_partitions_buckets() {
+    forall(200, |rng| {
+        let key = random_bucket(rng);
+        check(key.shard(1) == 0, || "single shard must own everything".into())?;
+        for shards in 1..=8usize {
+            let s = key.shard(shards);
+            check(s < shards, || format!("shard {s} out of range for {shards}"))?;
+            // purity: the same bucket — whether the same value or an
+            // independently reconstructed equal one — always lands on
+            // the same shard, so no bucket can straddle two shards
+            let rebuilt = BucketKey { kind: key.kind, n: key.n, m: key.m, p: key.p, dv: key.dv };
+            check(rebuilt.shard(shards) == s && key.shard(shards) == s, || {
+                format!("routing not a pure function of the bucket at {shards} shards")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// The leader contract over arbitrary interleaved arrivals: expired
+/// slots are shed (exactly those), the leader is the oldest live slot
+/// of the winning lane, High wins unless the oldest live Normal is both
+/// past the starvation bound and older than the oldest live High.
+#[test]
+fn prop_priority_leader_and_starvation_bound() {
+    forall(300, |rng| {
+        let base = Instant::now();
+        let now = base + Duration::from_secs(60);
+        let slots = random_slots(rng, base, now);
+        let starve_after = Duration::from_millis(rng.below(3000) as u64);
+        let plan = plan_leader(&slots, now, starve_after);
+
+        let expired: Vec<usize> =
+            (0..slots.len()).filter(|&i| slots[i].expired(now)).collect();
+        check(plan.shed == expired, || {
+            format!("shed {:?} != expired {:?}", plan.shed, expired)
+        })?;
+        let live: Vec<usize> = (0..slots.len()).filter(|&i| !slots[i].expired(now)).collect();
+        let oldest = |lane: Priority| live.iter().copied().find(|&i| slots[i].priority == lane);
+        let (oldest_high, oldest_normal) = (oldest(Priority::High), oldest(Priority::Normal));
+
+        let Some(leader) = plan.leader else {
+            return check(live.is_empty(), || "live slots but no leader".into());
+        };
+        check(!slots[leader].expired(now), || format!("expired leader {leader}"))?;
+        match slots[leader].priority {
+            Priority::High => {
+                check(Some(leader) == oldest_high, || {
+                    format!("leader {leader} is not the oldest live High")
+                })?;
+                // High may only lead if no starved older Normal exists
+                if let Some(n) = oldest_normal {
+                    let starving = now.duration_since(slots[n].enqueued) >= starve_after;
+                    check(
+                        !(starving && slots[n].enqueued < slots[leader].enqueued),
+                        || format!("starved older Normal {n} was passed over for {leader}"),
+                    )?;
+                }
+            }
+            Priority::Normal => {
+                check(Some(leader) == oldest_normal, || {
+                    format!("leader {leader} is not the oldest live Normal")
+                })?;
+                // Normal may only outrank a queued High via the bound
+                if let Some(h) = oldest_high {
+                    let starving = now.duration_since(slots[leader].enqueued) >= starve_after;
+                    check(starving && slots[leader].enqueued < slots[h].enqueued, || {
+                        format!("Normal {leader} outranked High {h} without starving")
+                    })?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The gather contract over arbitrary interleaved arrivals: at most
+/// `room` taken, all taken are live and bucket-matching, the high lane
+/// is taken before the normal lane, each lane is FIFO, sheds are
+/// exactly the expired slots, and no live matching slot is left behind
+/// while room remains.
+#[test]
+fn prop_priority_gather_preserves_per_lane_fifo() {
+    forall(300, |rng| {
+        let base = Instant::now();
+        let now = base + Duration::from_secs(60);
+        let slots = random_slots(rng, base, now);
+        let key = if slots.is_empty() || rng.below(4) == 0 {
+            random_bucket(rng)
+        } else {
+            slots[rng.below(slots.len())].bucket
+        };
+        let room = rng.below(8);
+        let plan = plan_gather(&slots, &key, room, now);
+
+        check(plan.take.len() <= room, || {
+            format!("took {} with room {room}", plan.take.len())
+        })?;
+        let expired: Vec<usize> =
+            (0..slots.len()).filter(|&i| slots[i].expired(now)).collect();
+        check(plan.shed == expired, || {
+            format!("shed {:?} != expired {:?}", plan.shed, expired)
+        })?;
+        for &i in &plan.take {
+            check(!slots[i].expired(now), || format!("took expired slot {i}"))?;
+            check(slots[i].bucket == key, || format!("took foreign-bucket slot {i}"))?;
+        }
+        // high lane first, ascending (FIFO) indices within each lane
+        let split = plan
+            .take
+            .iter()
+            .position(|&i| slots[i].priority == Priority::Normal)
+            .unwrap_or(plan.take.len());
+        let (highs, normals) = plan.take.split_at(split);
+        check(highs.iter().all(|&i| slots[i].priority == Priority::High), || {
+            format!("normal before high in {:?}", plan.take)
+        })?;
+        check(normals.iter().all(|&i| slots[i].priority == Priority::Normal), || {
+            format!("high after the normal tail in {:?}", plan.take)
+        })?;
+        check(
+            highs.windows(2).all(|w| w[0] < w[1]) && normals.windows(2).all(|w| w[0] < w[1]),
+            || format!("a lane is not FIFO in {:?}", plan.take),
+        )?;
+        // completeness: under-full take means nothing matching was left
+        if plan.take.len() < room {
+            for i in 0..slots.len() {
+                let matching = !slots[i].expired(now) && slots[i].bucket == key;
+                check(!matching || plan.take.contains(&i), || {
+                    format!("live matching slot {i} left behind with room to spare")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_rng_split_streams_uncorrelated() {
     forall(10, |rng| {

@@ -12,7 +12,7 @@ use skyformer::attention::exact;
 use skyformer::kernels::{self, pool, KernelCtx};
 use skyformer::linalg::Matrix;
 use skyformer::serve::{
-    Head, ModelKind, Outcome, RejectReason, Request, ServeConfig, Server, ShedReason,
+    Head, ModelKind, Outcome, Priority, RejectReason, Request, ServeConfig, Server, ShedReason,
 };
 use skyformer::util::rng::Rng;
 
@@ -36,7 +36,7 @@ fn gen_request(
             }
         })
         .collect();
-    Request { id, kind, heads, deadline: None }
+    Request { id, kind, heads, deadline: None, priority: Priority::Normal }
 }
 
 /// Per-request (unbatched) reference outputs under a fixed 1-thread
@@ -77,6 +77,7 @@ fn served_outputs_bit_identical_to_unbatched_across_schedules() {
                 queue_capacity: 64,
                 max_batch: 4,
                 max_wait: Duration::from_millis(2),
+                ..ServeConfig::default()
             };
             let server = Server::start(cfg, ctx);
             let requests: Vec<Request> = (0..16).map(|id| mixed_request(7, id)).collect();
@@ -111,6 +112,7 @@ fn partial_batch_dispatches_despite_foreign_bucket_backlog() {
         queue_capacity: 64,
         max_batch: 4,
         max_wait: Duration::from_millis(2),
+        ..ServeConfig::default()
     };
     let server = Server::start(cfg, ctx);
     // 3 requests of one bucket (can never reach max_batch = 4) and 2 of
@@ -143,6 +145,7 @@ fn shutdown_drains_already_admitted_requests() {
         queue_capacity: 64,
         max_batch: 8,
         max_wait: Duration::from_micros(100),
+        ..ServeConfig::default()
     };
     let server = Server::start(cfg, ctx);
     let tickets: Vec<_> = (0..12)
@@ -175,7 +178,13 @@ fn expired_requests_are_shed_not_served() {
 fn malformed_requests_never_enter_the_queue() {
     let ctx = KernelCtx::with_threads(1).with_mode(pool::Mode::Scoped);
     let server = Server::start(ServeConfig::default(), ctx);
-    let no_heads = Request { id: 0, kind: ModelKind::Exact, heads: vec![], deadline: None };
+    let no_heads = Request {
+        id: 0,
+        kind: ModelKind::Exact,
+        heads: vec![],
+        deadline: None,
+        priority: Priority::Normal,
+    };
     assert!(matches!(server.submit(no_heads), Err(RejectReason::Malformed(_))));
     let mut mixed_shapes = mixed_request(17, 0);
     mixed_shapes.heads = vec![
@@ -184,6 +193,109 @@ fn malformed_requests_never_enter_the_queue() {
     ];
     assert!(matches!(server.submit(mixed_shapes), Err(RejectReason::Malformed(_))));
     server.shutdown();
+}
+
+/// Sharding must change scheduling only, never bytes: the same request
+/// set served through 1 and through 4 dispatcher shards completes with
+/// identical (reference-equal) outputs.
+#[test]
+fn sharded_server_outputs_bit_identical_to_single_dispatcher() {
+    let requests: Vec<Request> = (0..20).map(|id| mixed_request(29, id)).collect();
+    for dispatchers in [1usize, 4] {
+        let ctx = KernelCtx::with_threads(2).with_mode(pool::Mode::Scoped);
+        let cfg = ServeConfig {
+            queue_capacity: 64,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            dispatchers,
+            ..ServeConfig::default()
+        };
+        let server = Server::start(cfg, ctx);
+        let tickets: Vec<_> = requests
+            .iter()
+            .map(|r| server.submit(r.clone()).expect("admission"))
+            .collect();
+        for (req, ticket) in requests.iter().zip(&tickets) {
+            match ticket.wait() {
+                Outcome::Completed { outputs } => assert_bitwise_eq(
+                    &outputs,
+                    &reference_outputs(req),
+                    &format!("req {} (dispatchers={dispatchers})", req.id),
+                ),
+                other => panic!(
+                    "req {} did not complete under {dispatchers} dispatchers: {other:?}",
+                    req.id
+                ),
+            }
+        }
+        server.shutdown();
+    }
+}
+
+/// Priority lanes end to end: a mixed High/Normal load where every
+/// request still completes with reference-equal bytes — the lanes
+/// reorder batch formation, never outputs — and High requests are
+/// admitted and served like any other.
+#[test]
+fn priority_lanes_change_scheduling_not_bytes() {
+    let ctx = KernelCtx::with_threads(2).with_mode(pool::Mode::Pinned);
+    let cfg = ServeConfig {
+        queue_capacity: 64,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        dispatchers: 2,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, ctx);
+    let requests: Vec<Request> = (0..18)
+        .map(|id| {
+            let mut req = mixed_request(31, id);
+            if id % 3 == 0 {
+                req.priority = Priority::High;
+            }
+            req
+        })
+        .collect();
+    let tickets: Vec<_> = requests
+        .iter()
+        .map(|r| server.submit(r.clone()).expect("admission"))
+        .collect();
+    for (req, ticket) in requests.iter().zip(&tickets) {
+        match ticket.wait() {
+            Outcome::Completed { outputs } => assert_bitwise_eq(
+                &outputs,
+                &reference_outputs(req),
+                &format!("req {} ({})", req.id, req.priority.name()),
+            ),
+            other => panic!("req {} did not complete: {other:?}", req.id),
+        }
+    }
+    server.shutdown();
+}
+
+/// `close()` is the non-blocking half of shutdown: new submissions are
+/// rejected immediately with ShuttingDown, but the already-admitted
+/// backlog still drains to completion when shutdown() follows.
+#[test]
+fn close_rejects_new_submits_but_drains_admitted() {
+    let ctx = KernelCtx::with_threads(1).with_mode(pool::Mode::Scoped);
+    let server = Server::start(ServeConfig::default(), ctx);
+    let tickets: Vec<_> = (0..6)
+        .map(|id| server.submit(mixed_request(37, id)).expect("admission"))
+        .collect();
+    server.close();
+    assert!(matches!(
+        server.submit(mixed_request(37, 100)),
+        Err(RejectReason::ShuttingDown)
+    ));
+    server.close(); // idempotent
+    server.shutdown();
+    for (id, t) in tickets.iter().enumerate() {
+        assert!(
+            matches!(t.wait(), Outcome::Completed { .. }),
+            "request {id} not completed by the post-close drain"
+        );
+    }
 }
 
 /// Property sweep: random request mixes and serving knobs — every
@@ -199,11 +311,21 @@ fn prop_any_batching_schedule_preserves_outputs() {
             queue_capacity: 64,
             max_batch: 1 + rng.below(6),
             max_wait: Duration::from_micros(50 + rng.below(2000) as u64),
+            dispatchers: 1 + rng.below(4),
+            ..ServeConfig::default()
         };
         let ctx = KernelCtx::with_threads(threads).with_mode(mode);
         let server = Server::start(cfg, ctx);
         let n_req = 4 + rng.below(12) as u64;
-        let requests: Vec<Request> = (0..n_req).map(|id| mixed_request(100 + case, id)).collect();
+        let requests: Vec<Request> = (0..n_req)
+            .map(|id| {
+                let mut req = mixed_request(100 + case, id);
+                if rng.below(3) == 0 {
+                    req.priority = Priority::High;
+                }
+                req
+            })
+            .collect();
         let tickets: Vec<_> = requests
             .iter()
             .map(|r| server.submit(r.clone()).expect("admission"))

@@ -1,0 +1,228 @@
+//! Concurrency stress / fault-injection suite for the serving
+//! subsystem: many client threads × mixed buckets × mixed priority
+//! lanes × random deadlines, racing a mid-load `Server::close()` —
+//! the accounting invariant under fire.
+//!
+//! Invariants asserted every iteration:
+//!
+//! * **Zero lost tickets**: completed + shed + rejected == submitted.
+//!   Every submission either returns an admission error (rejected) or a
+//!   ticket, and every ticket resolves — no `Ticket::wait()` deadlocks,
+//!   even with shutdown racing admission.
+//! * **No Dropped outcomes**: close() + shutdown() is the *graceful*
+//!   path; the teardown safety-net (`ShedReason::Dropped`) must never
+//!   fire on it.
+//! * **Bytes under fire**: every completed output is bit-identical to
+//!   an unbatched recompute on a fixed 1-thread scoped schedule —
+//!   whatever batches, shards, lanes, and shed decisions the race
+//!   produced.
+//!
+//! Both pool backends run the same gauntlet.  Iteration count is
+//! `SKYFORMER_STRESS_ITERS` (default 3; scripts/ci.sh runs 10; the PR
+//! acceptance bar is 50 clean consecutive iterations).
+
+use std::time::{Duration, Instant};
+
+use skyformer::attention::exact;
+use skyformer::kernels::{self, pool, KernelCtx};
+use skyformer::linalg::Matrix;
+use skyformer::serve::{
+    Head, ModelKind, Outcome, Priority, Request, ServeConfig, Server, ShedReason, Ticket,
+};
+use skyformer::util::rng::Rng;
+
+const CLIENTS: usize = 16;
+const PER_CLIENT: usize = 24;
+
+/// Request data, lane, and deadline *class* are all pure functions of
+/// `(seed, id)` — any completed request can be regenerated for the
+/// unbatched recompute, and reruns of a failing iteration see the same
+/// workload (modulo wall-clock deadline races, which only move requests
+/// between the completed and shed buckets — both legal).
+fn gen_request(seed: u64, id: u64) -> Request {
+    let mut r = Rng::new(seed).split(id);
+    let kind = if r.below(2) == 0 { ModelKind::Exact } else { ModelKind::Kernelized };
+    let (n, m, p, dv) = [(8, 8, 4, 4), (12, 10, 5, 4), (6, 8, 4, 2)][r.below(3)];
+    let heads = (0..1 + r.below(3))
+        .map(|h| {
+            let mut hr = Rng::new(seed).split(id).split(h as u64 + 1);
+            Head {
+                q: Matrix::randn(&mut hr, n, p, 0.5),
+                k: Matrix::randn(&mut hr, m, p, 0.5),
+                v: Matrix::randn(&mut hr, m, dv, 1.0),
+            }
+        })
+        .collect();
+    let priority = if r.below(3) == 0 { Priority::High } else { Priority::Normal };
+    // deadline classes: most never expire; some are dead on arrival
+    // (must shed); some are tight enough to race the pipeline either way
+    let deadline = match r.below(8) {
+        0 => Some(Instant::now() - Duration::from_millis(1)),
+        1 => Some(Instant::now() + Duration::from_micros(200 + r.below(3000) as u64)),
+        _ => None,
+    };
+    Request { id, kind, heads, deadline, priority }
+}
+
+/// Unbatched per-request oracle on a fixed schedule.
+fn reference_digest(seed: u64, id: u64) -> u64 {
+    let ctx = KernelCtx::with_threads(1).with_mode(pool::Mode::Scoped);
+    let req = gen_request(seed, id);
+    const FNV: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    req.heads.iter().fold(FNV, |h, hd| {
+        let out = match req.kind {
+            ModelKind::Exact => exact::softmax_attention_in(ctx, &hd.q, &hd.k, &hd.v),
+            ModelKind::Kernelized => exact::kernelized_attention_in(ctx, &hd.q, &hd.k, &hd.v),
+        };
+        (h ^ kernels::digest(&out)).wrapping_mul(FNV_PRIME)
+    })
+}
+
+fn served_digest(outputs: &[Matrix]) -> u64 {
+    const FNV: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    outputs.iter().fold(FNV, |h, o| (h ^ kernels::digest(o)).wrapping_mul(FNV_PRIME))
+}
+
+/// One full gauntlet: spin up a server, race 16 clients against a
+/// mid-load close(), drain, and audit the books.
+fn stress_once(iter: u64, mode: pool::Mode) {
+    let seed = 0xC0FFEE + iter;
+    let ctx = KernelCtx::with_threads(2 + (iter % 3) as usize).with_mode(mode);
+    let cfg = ServeConfig {
+        // small shards: real backpressure (QueueFull) under 16 clients
+        queue_capacity: 8,
+        max_batch: 3,
+        max_wait: Duration::from_micros(200),
+        dispatchers: 1 + (iter % 4) as usize,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, ctx);
+
+    // (id, Some(ticket) | None = rejected at admission)
+    let results: Vec<(u64, Option<Ticket>)> = std::thread::scope(|scope| {
+        let server = &server;
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut out = Vec::with_capacity(PER_CLIENT);
+                    for j in 0..PER_CLIENT {
+                        let id = (c * 1000 + j) as u64;
+                        let req = gen_request(seed, id);
+                        // no retry: a rejection (QueueFull from the tiny
+                        // shards, ShuttingDown from the racer) is a
+                        // legal terminal state the audit must count
+                        out.push((id, server.submit(req).ok()));
+                    }
+                    out
+                })
+            })
+            .collect();
+        // fault injection: close admission somewhere in the middle of
+        // the submission storm — every in-flight submit must land in
+        // exactly one bucket (ticket or rejection), never vanish
+        let racer = scope.spawn(move || {
+            std::thread::sleep(Duration::from_micros(300 + (seed % 700)));
+            server.close();
+            server.close(); // idempotent under the race too
+        });
+        racer.join().expect("close racer");
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    server.shutdown();
+
+    let submitted = results.len();
+    let (mut completed, mut shed, mut rejected) = (0usize, 0usize, 0usize);
+    for (id, ticket) in results {
+        match ticket {
+            None => rejected += 1,
+            Some(t) => match t.wait() {
+                Outcome::Completed { outputs } => {
+                    completed += 1;
+                    assert_eq!(
+                        served_digest(&outputs),
+                        reference_digest(seed, id),
+                        "iter {iter} ({mode:?}): request {id} served bytes diverged from \
+                         the unbatched recompute"
+                    );
+                }
+                Outcome::Shed(ShedReason::DeadlineExpired) => shed += 1,
+                Outcome::Shed(ShedReason::Dropped) => {
+                    panic!(
+                        "iter {iter} ({mode:?}): request {id} Dropped on a graceful \
+                         close+shutdown drain"
+                    )
+                }
+            },
+        }
+    }
+    assert_eq!(
+        completed + shed + rejected,
+        submitted,
+        "iter {iter} ({mode:?}): lost tickets ({completed} completed + {shed} shed + \
+         {rejected} rejected != {submitted} submitted)"
+    );
+    assert_eq!(submitted, CLIENTS * PER_CLIENT);
+}
+
+fn stress_iters() -> u64 {
+    std::env::var("SKYFORMER_STRESS_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+}
+
+#[test]
+fn stress_mixed_load_races_shutdown_scoped() {
+    for iter in 0..stress_iters() {
+        stress_once(iter, pool::Mode::Scoped);
+    }
+}
+
+#[test]
+fn stress_mixed_load_races_shutdown_pinned() {
+    for iter in 0..stress_iters() {
+        stress_once(iter, pool::Mode::Pinned);
+    }
+}
+
+/// All-expired fault injection: every request is dead on arrival while
+/// shutdown races admission — nothing completes, nothing is lost, and
+/// the drain terminates (no gatherer waits on a batch that can never
+/// form).
+#[test]
+fn stress_all_expired_load_drains_clean() {
+    let ctx = KernelCtx::with_threads(2).with_mode(pool::Mode::Scoped);
+    let cfg = ServeConfig {
+        queue_capacity: 8,
+        max_batch: 3,
+        max_wait: Duration::from_micros(200),
+        dispatchers: 2,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg, ctx);
+    let results: Vec<Option<Ticket>> = std::thread::scope(|scope| {
+        let server = &server;
+        let handles: Vec<_> = (0..8)
+            .map(|c| {
+                scope.spawn(move || {
+                    (0..16)
+                        .map(|j| {
+                            let mut req = gen_request(991, (c * 100 + j) as u64);
+                            req.deadline = Some(Instant::now() - Duration::from_millis(1));
+                            server.submit(req).ok()
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let racer = scope.spawn(move || server.close());
+        racer.join().expect("close racer");
+        handles.into_iter().flat_map(|h| h.join().expect("client")).collect()
+    });
+    server.shutdown();
+    for ticket in results.into_iter().flatten() {
+        assert!(
+            matches!(ticket.wait(), Outcome::Shed(ShedReason::DeadlineExpired)),
+            "dead-on-arrival request must shed, not complete or drop"
+        );
+    }
+}

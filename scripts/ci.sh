@@ -86,25 +86,46 @@ echo "==> serve-bench smoke: zero lost requests + batched-dispatch digest, both 
 # prints a `serve_digest <hex>` line folded over per-request output
 # digests in id order — so it must be byte-identical across thread
 # counts and pool backends no matter what batches the timing produced.
+# Sharding and priority lanes change scheduling, never bytes: the digest
+# must also be identical across --dispatchers {1,4}, and a 25% High-lane
+# mix on the sharded runs must not move it either.
 SERVE_REF=""
+SERVE_SCHEDULES=0
 for t in 1 4; do
     for m in scoped pinned; do
-        OUT=/tmp/BENCH_serve_${t}_${m}.json
-        LINE=$(SKYFORMER_POOL=$m target/release/skyformer serve-bench --smoke \
-            --requests 200 --clients 4 --seq 32,48 --dim 16 --threads "$t" \
-            --out "$OUT" | grep '^serve_digest ')
-        test -s "$OUT"
-        if [ -z "$SERVE_REF" ]; then
-            SERVE_REF="$LINE"
-        elif [ "$LINE" != "$SERVE_REF" ]; then
-            echo "serve digest diverged at --threads $t, pool=$m:" >&2
-            echo "  want: $SERVE_REF" >&2
-            echo "  got:  $LINE" >&2
-            exit 1
-        fi
+        for d in 1 4; do
+            MIX=0
+            if [ "$d" = 4 ]; then MIX=25; fi
+            OUT=/tmp/BENCH_serve_${t}_${m}_${d}.json
+            LINE=$(SKYFORMER_POOL=$m target/release/skyformer serve-bench --smoke \
+                --requests 200 --clients 4 --seq 32,48 --dim 16 --threads "$t" \
+                --dispatchers "$d" --priority-mix "$MIX" \
+                --out "$OUT" | grep '^serve_digest ')
+            test -s "$OUT"
+            SERVE_SCHEDULES=$((SERVE_SCHEDULES + 1))
+            if [ -z "$SERVE_REF" ]; then
+                SERVE_REF="$LINE"
+            elif [ "$LINE" != "$SERVE_REF" ]; then
+                echo "serve digest diverged at --threads $t, pool=$m, --dispatchers $d:" >&2
+                echo "  want: $SERVE_REF" >&2
+                echo "  got:  $LINE" >&2
+                exit 1
+            fi
+        done
     done
 done
-echo "    200-request smoke load: zero lost requests, $SERVE_REF stable across 4 schedules"
+echo "    200-request smoke load: zero lost requests, $SERVE_REF stable across $SERVE_SCHEDULES schedules"
+
+echo "==> serve stress gate: 16 clients x mixed lanes x shutdown races, both pool backends"
+# 10 iterations per backend here (default is 3 under plain cargo test;
+# the PR acceptance bar is 50 clean iterations, run manually via
+# SKYFORMER_STRESS_ITERS=50).  Zero lost tickets, zero Dropped, every
+# completed output bit-identical to the unbatched recompute.
+for m in scoped pinned; do
+    SKYFORMER_STRESS_ITERS=10 SKYFORMER_POOL=$m \
+        cargo test --workspace --release -q --test serve_stress
+done
+echo "    stress suite clean: 10 iterations x {scoped, pinned}"
 
 echo "==> offline benches smoke-run (bench artifact + obs dump path)"
 cargo bench --bench table2_time -- --out /tmp/BENCH_table2.json
